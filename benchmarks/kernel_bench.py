@@ -1,0 +1,65 @@
+"""Wall-time of the Pallas kernels (interpret mode on CPU) vs jnp oracles.
+
+interpret=True timings are NOT TPU performance — they validate that the
+kernels run and give a cost sanity check; the TPU performance story is the
+roofline analysis (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timer
+from repro.core import MXFormat, quantize
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mxint_gelu import mxint_gelu
+from repro.kernels.mxint_layernorm import mxint_layernorm
+from repro.kernels.mxint_matmul import mxint_matmul
+from repro.kernels.mxint_softmax import mxint_softmax
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    x = jnp.asarray(rng.normal(size=(128, 1024)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(1024, 512)).astype(np.float32) * 0.05)
+    wq = quantize(w, MXFormat(6, 256), axis=0)
+
+    t = timer(lambda: mxint_matmul(x, wq.mantissa, wq.exponent, w_block=256,
+                                   bm=128, bn=128, bk=256))
+    rows.append(("kernel/mxint_matmul_128x1024x512", round(t, 1),
+                 "pallas interpret"))
+    t = timer(lambda: ref.mxint_matmul_ref(x, wq.mantissa, wq.exponent,
+                                           w_block=256))
+    rows.append(("kernel/mxint_matmul_ref", round(t, 1), "jnp oracle"))
+
+    xl = jnp.asarray(rng.normal(size=(256, 768)).astype(np.float32))
+    g, b = jnp.ones((768,)), jnp.zeros((768,))
+    t = timer(lambda: mxint_layernorm(xl, g, b, block_rows=128))
+    rows.append(("kernel/mxint_layernorm_256x768", round(t, 1), "pallas"))
+    t = timer(lambda: ref.mxint_layernorm_ref(xl, g, b))
+    rows.append(("kernel/mxint_layernorm_ref", round(t, 1), "jnp oracle"))
+
+    t = timer(lambda: mxint_softmax(xl, block_rows=128))
+    rows.append(("kernel/mxint_softmax_256x768", round(t, 1), "pallas"))
+    t = timer(lambda: mxint_gelu(xl, block_rows=128))
+    rows.append(("kernel/mxint_gelu_256x768", round(t, 1), "pallas"))
+
+    q = jnp.asarray(rng.normal(size=(4, 256, 128)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.normal(size=(4, 256, 128)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(4, 256, 128)).astype(np.float32))
+    t = timer(lambda: flash_attention(q, k, v, causal=True))
+    rows.append(("kernel/flash_attention_float", round(t, 1), "pallas"))
+    t = timer(lambda: flash_attention(q, k, v, causal=True,
+                                      exp_mode="mxint"))
+    rows.append(("kernel/flash_attention_mxint", round(t, 1),
+                 "pallas, Eq14-19 exp datapath"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,143 @@
+"""Tables II / III / IV + Figs 4 / 7 / 8 / 9: per-operator datapaths.
+
+For each non-linear operator (LayerNorm, GELU, Softmax) the model runs with
+ONLY that operator quantized (linears at 16-bit mantissa = lossless), and
+each datapath variant:
+
+    original          float op
+    fixedpoint8       [9] / HeatViT / I-ViT style integer datapath
+    relu6             SDA's GELU substitute (GELU only)
+    vanilla mxint     huge-LUT MXInt (paper's 'Vanilla MXInt' rows)
+    optimized mxint   the paper's final datapath (5 / 5 / 2 bits)
+
+plus the paper's DSE sweeps:
+    Fig 4: LayerNorm rsqrt-LUT bits      2..8
+    Fig 7: GELU LUT domain a             1..4   (bits=8)
+    Fig 8: GELU LUT bits                 3..8   (domain=3)
+    Fig 9: Softmax r bits                1..6
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks import common
+from repro.core.mx_types import MXFormat, NonlinearConfig, QuantConfig
+from repro.models import build_model
+
+_LOSSLESS_LIN = dict(weight_fmt=MXFormat(mant_bits=16, block_size=256),
+                     act_fmt=MXFormat(mant_bits=16, block_size=16))
+
+
+def _cfg(op, nl=None, nl_emulate=None):
+    return QuantConfig(mode="sim", quantize_nonlinear=True, nl_ops=(op,),
+                       nonlinear=nl or NonlinearConfig(),
+                       nl_emulate=nl_emulate, **_LOSSLESS_LIN)
+
+
+def _acc(model_cfg_quant, params):
+    m = build_model(dataclasses.replace(common.BENCH_DEIT,
+                                        quant=model_cfg_quant))
+    t0 = time.perf_counter()
+    acc = common.eval_accuracy(m, params)
+    return acc, (time.perf_counter() - t0) * 1e6
+
+
+def run():
+    model, params = common.trained_deit_micro()
+    base = common.eval_accuracy(model, params)
+    rows = [("per_op/float_baseline", 0.0, f"acc={base:.4f}")]
+
+    # ---- Table II: LayerNorm --------------------------------------------
+    variants = [
+        ("table2/fixedpoint8", _cfg("layernorm", nl_emulate="fixedpoint"),
+         "bits=8"),
+        ("table2/vanilla_mxint", _cfg("layernorm",
+                                      NonlinearConfig(ln_lut_bits=13)),
+         "bits=13"),
+        ("table2/optimized_mxint", _cfg("layernorm",
+                                        NonlinearConfig(ln_lut_bits=5)),
+         "bits=5"),
+    ]
+    for name, q, meta in variants:
+        acc, us = _acc(q, params)
+        rows.append((name, round(us, 1),
+                     f"{meta} acc={acc:.4f} loss={base - acc:+.4f}"))
+
+    # Fig 4: rsqrt LUT bits sweep
+    for bits in (2, 3, 4, 5, 6, 8):
+        acc, us = _acc(_cfg("layernorm", NonlinearConfig(ln_lut_bits=bits)),
+                       params)
+        rows.append((f"fig4/ln_lut_bits_{bits}", round(us, 1),
+                     f"acc={acc:.4f} loss={base - acc:+.4f}"))
+
+    # ---- Table III: GELU ---------------------------------------------------
+    variants = [
+        ("table3/fixedpoint8_poly", _cfg("gelu", nl_emulate="fixedpoint"),
+         "bits=8"),
+        ("table3/sda_relu6", _cfg("gelu", nl_emulate="relu6"), "bits=8"),
+        ("table3/vanilla_mxint", _cfg(
+            "gelu", NonlinearConfig(gelu_lut_bits=14, gelu_domain=8.0)),
+         "bits=14"),
+        ("table3/optimized_mxint", _cfg(
+            "gelu", NonlinearConfig(gelu_lut_bits=5, gelu_domain=3.0)),
+         "bits=5"),
+    ]
+    for name, q, meta in variants:
+        acc, us = _acc(q, params)
+        rows.append((name, round(us, 1),
+                     f"{meta} acc={acc:.4f} loss={base - acc:+.4f}"))
+
+    # Fig 7: domain sweep at bits=8
+    for dom in (1.0, 2.0, 3.0, 4.0):
+        acc, us = _acc(_cfg("gelu", NonlinearConfig(gelu_lut_bits=8,
+                                                    gelu_domain=dom)),
+                       params)
+        rows.append((f"fig7/gelu_domain_{dom:g}", round(us, 1),
+                     f"acc={acc:.4f} loss={base - acc:+.4f}"))
+    # Fig 8: bits sweep at domain=3
+    for bits in (3, 4, 5, 6, 8):
+        acc, us = _acc(_cfg("gelu", NonlinearConfig(gelu_lut_bits=bits,
+                                                    gelu_domain=3.0)),
+                       params)
+        rows.append((f"fig8/gelu_bits_{bits}", round(us, 1),
+                     f"acc={acc:.4f} loss={base - acc:+.4f}"))
+
+    # ---- Table IV: Softmax --------------------------------------------------
+    variants = [
+        ("table4/fixedpoint8_shiftexp", _cfg("softmax",
+                                             nl_emulate="fixedpoint"),
+         "bits=8"),
+        ("table4/vanilla_mxint", _cfg(
+            "softmax", NonlinearConfig(softmax_r_bits=16)), "bits=16"),
+        ("table4/mxint_match_sda", _cfg(
+            "softmax", NonlinearConfig(softmax_r_bits=5)), "bits=5"),
+        ("table4/optimized_mxint", _cfg(
+            "softmax", NonlinearConfig(softmax_r_bits=2)), "bits=2"),
+    ]
+    for name, q, meta in variants:
+        acc, us = _acc(q, params)
+        rows.append((name, round(us, 1),
+                     f"{meta} acc={acc:.4f} loss={base - acc:+.4f}"))
+
+    # Fig 9: r bits sweep
+    for bits in (1, 2, 3, 4, 6):
+        acc, us = _acc(_cfg("softmax", NonlinearConfig(softmax_r_bits=bits)),
+                       params)
+        rows.append((f"fig9/softmax_r_bits_{bits}", round(us, 1),
+                     f"acc={acc:.4f} loss={base - acc:+.4f}"))
+
+    # ---- combined: the paper's full final datapath -----------------------
+    full = QuantConfig(mode="sim", quantize_nonlinear=True,
+                       weight_fmt=MXFormat(mant_bits=6, block_size=256),
+                       act_fmt=MXFormat(mant_bits=8, block_size=16))
+    acc, us = _acc(full, params)
+    rows.append(("per_op/full_mxint_system", round(us, 1),
+                 f"W6A8+LN5+GELU5+SM2 acc={acc:.4f} "
+                 f"loss={base - acc:+.4f} within_1pct={base - acc < 0.01}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,80 @@
+"""§Roofline: aggregate the dry-run artifacts into the 40-cell table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints, per (arch x shape x mesh x variant): the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-device HBM bytes.
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh_filter: str = "", tag: str = None):
+    if tag is None:
+        # prefer the post-§Perf 'final' sweep, fall back to earlier tags
+        for t in (".final", ".prod2", ".prod"):
+            if list(DRYRUN_DIR.glob(f"*{t}.json")):
+                tag = t
+                break
+        else:
+            return {}
+    cells = {}
+    for f in sorted(DRYRUN_DIR.glob(f"*{tag}.json")):
+        if f.name.startswith("summary"):
+            continue
+        rec = json.loads(f.read_text())
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        key = (rec["arch"], rec["shape"], rec["mesh"],
+               rec.get("variant", "-"))
+        cells[key] = rec
+    return cells
+
+
+def fmt_row(rec) -> str:
+    if rec.get("skipped"):
+        return "SKIP (" + rec["reason"][:60] + "...)"
+    if not rec.get("ok"):
+        return "FAIL"
+    r = rec["roofline"]
+    tot = rec["memory"]["total_device_bytes"]
+    parts = [
+        f"compute={r['compute_s']*1e3:.3f}ms",
+        f"memory={r['memory_s']*1e3:.3f}ms",
+        f"collective={r['collective_s']*1e3:.3f}ms",
+        f"bound={r['bottleneck']}",
+        f"useful_flops={100*r['useful_flops_ratio']:.1f}%"
+        if r.get("useful_flops_ratio") else "useful_flops=n/a",
+        f"dev_hbm={tot/2**30:.2f}GiB",
+    ]
+    return " ".join(parts)
+
+
+def run():
+    rows = []
+    cells = load_cells()
+    if not cells:
+        rows.append(("roofline/missing", 0.0,
+                     "run `python -m repro.launch.dryrun` first"))
+        return rows
+    for (arch, shape, mesh, variant), rec in sorted(cells.items()):
+        rows.append((f"roofline/{arch}/{shape}/{mesh}/{variant}",
+                     rec.get("compile_seconds") or 0.0, fmt_row(rec)))
+    # aggregate: bottleneck census on the single-pod bf16 baseline
+    census = defaultdict(int)
+    for (arch, shape, mesh, variant), rec in cells.items():
+        if mesh == "single_16x16" and variant in ("bf16", "-") and \
+                rec.get("ok") and not rec.get("skipped"):
+            census[rec["roofline"]["bottleneck"]] += 1
+    rows.append(("roofline/bottleneck_census_single_bf16", 0.0,
+                 " ".join(f"{k}={v}" for k, v in sorted(census.items()))))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,121 @@
+"""Table V / Fig 1b: model accuracy x memory density across formats.
+
+Reproduces the STRUCTURE of the paper's Table V on the synthetic-task DeiT
+(W and A both quantized, PTQ, no fine-tuning):
+
+    Float32 | Float8 (e4m3) | Int16 | Int8 (per-tensor) |
+    MXInt8/MXInt8 | MXInt6/MXInt8 | MXInt6/MXInt6 | MXInt4/MXInt6
+
+Qualitative claims checked:
+  * Int8 per-tensor collapses vs MXInt8 at the same bitwidth;
+  * MXInt8 is within 1% of Float32 at ~4x density;
+  * accuracy is monotone in mantissa bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks import common
+from repro.core.mx_types import MXFormat, QuantConfig
+from repro.configs.deit import DEIT_MICRO
+from repro.models import build_model
+
+
+def _row_cfg(w_bits, a_bits, emulate=None):
+    return QuantConfig(
+        mode="fake",
+        weight_fmt=MXFormat(mant_bits=w_bits, block_size=256),
+        act_fmt=MXFormat(mant_bits=a_bits, block_size=16),
+        emulate=emulate)
+
+
+ROWS = [
+    ("float32", None, 1.0),
+    ("float8_e4m3", _row_cfg(8, 8, emulate="fp8"), 4.0),
+    ("int16_w16a16", _row_cfg(16, 16, emulate="int"), 2.0),
+    ("int8_w8a8", _row_cfg(8, 8, emulate="int"), 4.0),
+    ("mxint8_w8.03/a8.5", _row_cfg(8, 8), 32 / 8.03),
+    ("mxint6_w6.03/a8.5", _row_cfg(6, 8), 32 / 6.03),
+    ("mxint6_w6.03/a6.5", _row_cfg(6, 6), 32 / 6.03),
+    ("mxint4_w4.03/a6.5", _row_cfg(4, 6), 32 / 4.03),
+]
+
+
+def run():
+    model, params = common.trained_deit_micro()
+    base_acc = common.eval_accuracy(model, params)
+    rows = []
+    accs = {}
+    for name, qcfg, density in ROWS:
+        if qcfg is None:
+            m = model
+        else:
+            m = build_model(dataclasses.replace(common.BENCH_DEIT,
+                                                quant=qcfg))
+        t0 = time.perf_counter()
+        acc = common.eval_accuracy(m, params)
+        us = (time.perf_counter() - t0) * 1e6
+        accs[name] = acc
+        rows.append((f"table5/{name}", round(us, 1),
+                     f"acc={acc:.4f} delta={acc - base_acc:+.4f} "
+                     f"density={density:.2f}x"))
+
+    checks = {
+        "mxint8_within_1pct":
+            accs["mxint8_w8.03/a8.5"] >= base_acc - 0.01,
+        "monotone_mx_bits":
+            accs["mxint4_w4.03/a6.5"] <= accs["mxint6_w6.03/a6.5"] + 0.02
+            and accs["mxint6_w6.03/a8.5"] <= accs["mxint8_w8.03/a8.5"] + 0.02,
+    }
+    rows.append(("table5/claims", 0.0,
+                 " ".join(f"{k}={v}" for k, v in checks.items())))
+    rows += outlier_microbench()
+    return rows
+
+
+def outlier_microbench():
+    """The WHY of Table V's Int8 collapse, isolated: a tensor with a
+    realistic outlier profile (0.1% of dims at 100x magnitude, the
+    LLM.int8()/ViT phenomenon).  Per-tensor int8 sets its LSB from the
+    outliers and destroys the small-signal dims; MXInt's per-block
+    exponents keep both.  Reported as SQNR (dB) on the small-signal dims —
+    deterministic, model-free.
+
+    (The accuracy rows above do not show the collapse: a micro-DeiT
+    trained on synthetic data has benign weight/activation distributions.
+    This bench demonstrates the mechanism the paper's ImageNet models hit.)
+    """
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.quantize import per_tensor_int_qdq, quantize_dequantize
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(256, 1024)).astype(np.float32)
+    out_idx = rng.choice(1024, size=1, replace=False)
+    x[:, out_idx] *= 100.0
+    xj = jnp.asarray(x)
+    small = np.ones(1024, bool)
+    small[out_idx] = False
+
+    def sqnr_db(ref, got):
+        num = float(np.sum(ref[:, small] ** 2))
+        den = float(np.sum((ref[:, small] - got[:, small]) ** 2)) + 1e-12
+        return 10 * np.log10(num / den)
+
+    int8 = np.asarray(per_tensor_int_qdq(xj, 8))
+    mx8 = np.asarray(quantize_dequantize(
+        xj, MXFormat(mant_bits=8, block_size=16), axis=-1))
+    s_int8 = sqnr_db(x, int8)
+    s_mx8 = sqnr_db(x, mx8)
+    return [
+        ("table5/outlier_sqnr_int8_db", 0.0, f"{s_int8:.1f}"),
+        ("table5/outlier_sqnr_mxint8_db", 0.0, f"{s_mx8:.1f}"),
+        ("table5/outlier_claim", 0.0,
+         f"mxint_isolates_outliers={s_mx8 - s_int8 > 20}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,54 @@
+"""Table VII analogue: system-level resource/performance per DeiT size.
+
+FPGA columns (kLUT/DSP/BRAM/Fmax/power) have no TPU meaning; the analogous
+system table is: parameter count, packed weight bytes (the paper's memory
+claim, measured on the real packed pytree), modeled latency/FPS at batch 1
+on one v5e chip, and GOPs/s — for both Float16 and MXInt W6/A8.5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.fig10_speedup import _roof_time, _vit_cost
+from repro.core.mx_types import (MXINT6_WEIGHT, PEAK_FLOPS_BF16,
+                                 PEAK_FLOPS_INT8)
+from repro.core.quantize import packed_bytes
+from repro.configs.deit import DEIT_TINY, DEIT_SMALL, DEIT_BASE
+from repro.models import build_model
+from repro.models.model_api import unwrap
+from repro.serving.engine import pack_params_mxint
+
+
+def run():
+    rows = []
+    for cfg in (DEIT_TINY, DEIT_SMALL, DEIT_BASE):
+        model = build_model(cfg)
+        params = jax.eval_shape(lambda m=model: m.init(jax.random.key(0)))
+        raw = unwrap(params)
+        n_params = sum(int(l.size) for l in jax.tree_util.tree_leaves(raw))
+        f16_bytes = n_params * 2
+        packed = pack_params_mxint(params, MXINT6_WEIGHT, abstract=True)
+        pb = 0
+        from repro.core.quantize import MXTensor
+        for leaf in jax.tree_util.tree_leaves(
+                unwrap(packed), is_leaf=lambda l: isinstance(l, MXTensor)):
+            if isinstance(leaf, MXTensor):
+                pb += leaf.nbytes_packed()
+            else:
+                pb += int(leaf.size) * 2
+        flops, _, acts = _vit_cost(cfg, batch=1)
+        t16, _, _ = _roof_time(flops, f16_bytes, acts * 2, PEAK_FLOPS_BF16)
+        tmx, _, _ = _roof_time(flops, pb, acts * 8.5 / 8, PEAK_FLOPS_INT8)
+        rows.append((f"table7/{cfg.name}", 0.0,
+                     f"params={n_params/1e6:.1f}M f16_bytes={f16_bytes/1e6:.1f}MB "
+                     f"mxint_bytes={pb/1e6:.1f}MB "
+                     f"density={f16_bytes/pb:.2f}x_vs_f16 "
+                     f"fps_f16={1/t16:,.0f} fps_mxint={1/tmx:,.0f} "
+                     f"gops_mxint={flops/tmx/1e9:,.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

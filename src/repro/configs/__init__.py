@@ -1,0 +1,58 @@
+"""Architecture registry: full configs + reduced smoke configs.
+
+Every assigned architecture is one module exposing ``FULL`` (the exact
+published config) and ``SMOKE`` (same family, tiny dims) plus
+``long_500k_supported`` / shape-skip metadata consumed by the dry-run and
+the roofline table.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.model_api import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "llava_next_mistral_7b",
+    "recurrentgemma_2b",
+    "llama3_8b",
+    "deepseek_67b",
+    "phi4_mini_3_8b",
+    "qwen3_14b",
+    "mixtral_8x7b",
+    "granite_moe_3b_a800m",
+    "xlstm_350m",
+    "seamless_m4t_medium",
+]
+
+VIT_IDS: List[str] = ["deit_tiny", "deit_small", "deit_base"]
+
+
+def _module(arch_id: str):
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def full_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).FULL
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def shape_supported(arch_id: str, shape_name: str) -> bool:
+    """40-cell applicability matrix (DESIGN.md §6)."""
+    mod = _module(arch_id)
+    if shape_name == "long_500k":
+        return getattr(mod, "LONG_500K_SUPPORTED", False)
+    return True
+
+
+def skip_reason(arch_id: str, shape_name: str) -> str:
+    mod = _module(arch_id)
+    return getattr(mod, "SKIP_REASON", "full quadratic attention at 512k "
+                   "context is neither sub-quadratic nor in scope")
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: full_config(a) for a in ARCH_IDS}

@@ -1,0 +1,48 @@
+"""xlstm-350m [ssm]: 24L d1024 4H ff- vocab 50304 — mLSTM + sLSTM blocks.
+
+xLSTM[7:1] layout: unit = 7 mLSTM + 1 sLSTM, repeated 3x.  mLSTM runs in
+its chunkwise-parallel linear-attention form (training) and as an O(1)
+matrix-memory update (decode); sLSTM is a sequential scalar-memory scan.
+Attention-free: the paper's softmax datapath is inapplicable, but the
+exponential input gate reuses the Eq. 14-19 pow2-LUT datapath
+(DESIGN.md §6).
+[arXiv:2405.04517; unverified]
+"""
+import jax.numpy as jnp
+
+from repro.models.model_api import ModelConfig
+
+FULL = ModelConfig(
+    name="xlstm_350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    unit=("mlstm",) * 7 + ("slstm",),
+    n_units=3,
+    ffn_kind="none",
+    tie_embeddings=True,
+    dtype=jnp.bfloat16,
+    remat="block",
+)
+
+SMOKE = ModelConfig(
+    name="xlstm_smoke",
+    family="ssm",
+    n_layers=8,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=512,
+    unit=("mlstm",) * 3 + ("slstm",),
+    n_units=2,
+    ffn_kind="none",
+    tie_embeddings=True,
+    dtype=jnp.float32,
+)
+
+LONG_500K_SUPPORTED = True   # O(1) recurrent state for both block kinds

@@ -1,0 +1,102 @@
+"""LUT builders for the paper's three non-linear datapaths (§III-B).
+
+All tables are tiny by construction — that is the paper's point.  On TPU a
+"LUT" is a small VMEM-resident vector consumed by a vectorized gather
+(`jnp.take` in the oracle; in-kernel index select in Pallas).
+
+Conventions
+-----------
+* ``rsqrt`` table: domain u ∈ [0.5, 2).  Even shared exponents index with the
+  normalized variance mantissa v_m ∈ [1,2); odd exponents index with v_m/2 ∈
+  [0.5, 1) (paper Eq. 9) — one table serves both halves.
+* ``pow2`` table: r ∈ [0, 1), entries 2^(i / 2^bits) (truncation indexing so
+  r = 0 → exactly 1.0, keeping the max element of a softmax row exact).
+* ``gelu`` table: domain x ∈ [-a, a), entries gelu(center of bin).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+_SQRT_2_OVER_PI = float(np.sqrt(2.0 / np.pi))
+
+
+# ---------------------------------------------------------------------------
+# Exact scalar references (float64 on host, used only to fill tables).
+# ---------------------------------------------------------------------------
+def gelu_exact(x: np.ndarray) -> np.ndarray:
+    """Exact erf-based GELU (paper Eq. 10/11)."""
+    from math import erf
+    xs = np.asarray(x, dtype=np.float64)
+    return xs * 0.5 * (1.0 + np.vectorize(erf)(xs / np.sqrt(2.0)))
+
+
+# ---------------------------------------------------------------------------
+# Table builders (cached; tables are host numpy, converted lazily).
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def rsqrt_table(bits: int) -> tuple:
+    """2^bits entries of 1/sqrt(u) over u in [0.5, 2), bucket midpoints."""
+    n = 2 ** bits
+    edges = 0.5 + 1.5 * np.arange(n, dtype=np.float64) / n
+    centers = edges + 0.75 / n
+    return tuple((1.0 / np.sqrt(centers)).astype(np.float32).tolist())
+
+
+@functools.lru_cache(maxsize=None)
+def pow2_table(bits: int) -> tuple:
+    """2^bits entries of 2^r over r in [0, 1), truncation indexing."""
+    n = 2 ** bits
+    r = np.arange(n, dtype=np.float64) / n
+    return tuple(np.exp2(r).astype(np.float32).tolist())
+
+
+@functools.lru_cache(maxsize=None)
+def gelu_table(bits: int, domain: float) -> tuple:
+    """2^bits entries of gelu(x) over x in [-domain, domain), midpoints."""
+    n = 2 ** bits
+    step = 2.0 * domain / n
+    centers = -domain + step * (np.arange(n, dtype=np.float64) + 0.5)
+    return tuple(gelu_exact(centers).astype(np.float32).tolist())
+
+
+# JAX-array views ------------------------------------------------------------
+def rsqrt_lut(bits: int) -> jnp.ndarray:
+    return jnp.asarray(rsqrt_table(bits), dtype=jnp.float32)
+
+
+def pow2_lut(bits: int) -> jnp.ndarray:
+    return jnp.asarray(pow2_table(bits), dtype=jnp.float32)
+
+
+def gelu_lut(bits: int, domain: float) -> jnp.ndarray:
+    return jnp.asarray(gelu_table(bits, float(domain)), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Indexing helpers shared by oracle + kernels (keep numerics identical).
+# ---------------------------------------------------------------------------
+def rsqrt_index(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """u in [0.5, 2) -> bucket index (truncation, hardware-style)."""
+    n = 2 ** bits
+    idx = jnp.floor((u - 0.5) * (n / 1.5)).astype(jnp.int32)
+    return jnp.clip(idx, 0, n - 1)
+
+
+def pow2_index(r: jnp.ndarray, bits: int) -> jnp.ndarray:
+    n = 2 ** bits
+    idx = jnp.floor(r * n).astype(jnp.int32)
+    return jnp.clip(idx, 0, n - 1)
+
+
+def gelu_index(x: jnp.ndarray, bits: int, domain: float) -> jnp.ndarray:
+    n = 2 ** bits
+    idx = jnp.floor((x + domain) * (n / (2.0 * domain))).astype(jnp.int32)
+    return jnp.clip(idx, 0, n - 1)
+
+
+def table_bytes(entries: int, value_bits: int = 16) -> int:
+    """Area proxy for DSE tables (paper counts LUT entries; we count bytes)."""
+    return entries * value_bits // 8

@@ -1,0 +1,173 @@
+"""Core type definitions for the MXInt (Microscaling Integer) format.
+
+The paper ("Refining Datapath for Microscaling ViTs") uses MXInt tensors in
+which a *block* of values shares one 8-bit exponent while each value keeps a
+small signed-integer mantissa.  A value is reconstructed as
+
+    x = 2**e_block * m                                           (paper Eq. 2)
+
+Bit cost per element is therefore ``mant_bits + exp_bits / block_size`` —
+e.g. the paper's W6.03 (6-bit mantissa, block 256) and A8.5 (8-bit mantissa,
+block 16) configurations in Fig. 1b.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e — the roofline target for this reproduction).
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip, bf16 MXU
+PEAK_FLOPS_INT8 = 394e12      # FLOP/s per chip, int8 MXU (2x bf16)
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per ICI link
+
+# FPGA constants from the paper (Alveo U250), kept for the Table VII analogue.
+U250_KLUTS = 1728
+U250_BRAM36 = 2688
+U250_URAM = 1280
+
+
+@dataclasses.dataclass(frozen=True)
+class MXFormat:
+    """An MXInt element format.
+
+    Attributes:
+      mant_bits: signed mantissa width in bits (including sign).  The paper
+        sweeps 4..14; MXInt8 means ``mant_bits=8``.
+      block_size: number of elements sharing one exponent.  Paper: 16 for
+        activations, 256 for weights (block == hardware tile).
+      exp_bits: stored width of the shared exponent.  Always 8 in the paper.
+    """
+
+    mant_bits: int = 8
+    block_size: int = 32
+    exp_bits: int = 8
+
+    def __post_init__(self):
+        if not (2 <= self.mant_bits <= 24):
+            raise ValueError(f"mant_bits must be in [2, 24], got {self.mant_bits}")
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if self.exp_bits != 8:
+            # The paper fixes the exponent at 8 bits; other widths would need
+            # saturation logic we have not validated.
+            raise ValueError("MXInt exponent is always 8 bits in this work")
+
+    # -- storage helpers ----------------------------------------------------
+    @property
+    def bits_per_element(self) -> float:
+        """Amortized bits per element (paper's W6.03 / A8.5 notation)."""
+        return self.mant_bits + self.exp_bits / self.block_size
+
+    @property
+    def mant_dtype(self) -> jnp.dtype:
+        if self.mant_bits <= 8:
+            return jnp.int8
+        if self.mant_bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    @property
+    def mant_max(self) -> int:
+        return 2 ** (self.mant_bits - 1) - 1
+
+    @property
+    def mant_min(self) -> int:
+        # Symmetric clip: excluding -2^(m-1) keeps quantization idempotent
+        # (Q(Q(x)) == Q(x)) and exactly sign-symmetric; costs one code point.
+        return -(2 ** (self.mant_bits - 1) - 1)
+
+    def density_vs(self, baseline_bits: float = 32.0) -> float:
+        """Memory density multiplier vs. a scalar format (Fig. 1b)."""
+        return baseline_bits / self.bits_per_element
+
+
+# The paper's published configurations.
+MXINT8_ACT = MXFormat(mant_bits=8, block_size=16)      # A8.5 in Fig 1b
+MXINT8_WEIGHT = MXFormat(mant_bits=8, block_size=256)
+MXINT6_WEIGHT = MXFormat(mant_bits=6, block_size=256)  # W6.03 in Fig 1b
+MXINT6_ACT = MXFormat(mant_bits=6, block_size=16)
+MXINT4_WEIGHT = MXFormat(mant_bits=4, block_size=256)
+
+# OCP MX spec default (MXINT8: block 32) — used by gradient compression.
+MXINT8_OCP = MXFormat(mant_bits=8, block_size=32)
+
+
+@dataclasses.dataclass(frozen=True)
+class NonlinearConfig:
+    """Datapath knobs for the paper's three non-linear operators (§III-B).
+
+    Defaults are the paper's final design points:
+      * LayerNorm rsqrt LUT index bits = 5 (Table II; >=4 per Fig 4)
+      * GELU domain a = 3, LUT bits = 5  (Table III; >=4 per Figs 7-8)
+      * Softmax r bits = 2               (Table IV; Fig 9)
+    """
+
+    ln_lut_bits: int = 5          # index bits of LUT_{1/sqrt}
+    gelu_domain: float = 3.0      # 'a' in Eq. 12
+    gelu_lut_bits: int = 5        # index bits of LUT_GELU
+    softmax_r_bits: int = 2       # fractional bits of r in Eq. 16
+    softmax_out_bits: int = 8     # mantissa bits of 2^r LUT output
+    acc_frac_bits: int = 12       # paper: 12-bit lossless accumulator mantissa
+
+    @property
+    def ln_lut_entries(self) -> int:
+        return 2 ** self.ln_lut_bits
+
+    @property
+    def gelu_index_bits(self) -> int:
+        """Fig 6: k = LUT bitwidth + log2(LUT domain) - 1 (ceil), the total
+        fixed-point index width of LUT_GELU."""
+        import math
+        return self.gelu_lut_bits + max(math.ceil(math.log2(self.gelu_domain)), 0) - 1
+
+    @property
+    def gelu_lut_entries(self) -> int:
+        return 2 ** self.gelu_index_bits
+
+    @property
+    def softmax_lut_entries(self) -> int:
+        return 2 ** self.softmax_r_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Framework-level quantization policy for a model.
+
+    mode:
+      'off'    — full-precision reference path.
+      'fake'   — quantize-dequantize in float (straight-through grads); used
+                 for QAT-style experiments and fast accuracy sweeps.
+      'sim'    — bit-accurate integer emulation of the paper's datapaths
+                 (the correctness oracle).
+      'packed' — weights stored as int8 mantissa planes + int8 exponents;
+                 dequant fused into the consuming kernel (serving path).
+    """
+
+    mode: str = "off"
+    weight_fmt: MXFormat = MXINT6_WEIGHT
+    act_fmt: MXFormat = MXINT8_ACT
+    nonlinear: Optional[NonlinearConfig] = None
+    quantize_nonlinear: bool = False   # route LN/softmax/GELU through MXInt
+    nl_ops: tuple = ("layernorm", "gelu", "softmax")  # per-op selectivity
+    emulate: Optional[str] = None      # None=MXInt | 'int' per-tensor |
+                                       # 'fp8' e4m3 — Table V baselines
+    nl_emulate: Optional[str] = None   # None=MXInt datapath | 'fixedpoint'
+                                       # ([9]/HeatViT/I-ViT) | 'relu6' (SDA)
+                                       # — Tables II-IV baselines
+
+    def __post_init__(self):
+        if self.mode not in ("off", "fake", "sim", "packed"):
+            raise ValueError(f"unknown quant mode {self.mode!r}")
+        if self.emulate not in (None, "int", "fp8"):
+            raise ValueError(f"unknown emulate {self.emulate!r}")
+        if self.quantize_nonlinear and self.nonlinear is None:
+            object.__setattr__(self, "nonlinear", NonlinearConfig())
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"

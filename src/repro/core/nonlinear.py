@@ -1,0 +1,274 @@
+"""Bit-accurate MXInt datapaths for LayerNorm, GELU and Softmax (§III-B).
+
+These are the *correctness oracles* for the Pallas kernels and the engines
+behind the paper's accuracy tables (Tables II-IV, VI) and DSE figures
+(Figs 4, 7, 8, 9).  Every step mirrors a hardware stage:
+
+  LayerNorm (Fig 3):  requantize-to-max-exponent -> integer mean/var ->
+                      variance rescale to (v_m, v_e) -> LUT_{1/sqrt}(v_m)
+                      with the even/odd exponent split of Eq. 9.
+  GELU (Fig 6):       ReLU tails + LUT over [-a, a) (Eq. 12), exponent
+                      forwarded from input to output.
+  Softmax (Eq 14-20): max-subtract in the shared-exponent domain,
+                      e^x = 2^n * LUT_pow2(r), division in (mantissa,
+                      exponent) form.
+
+Also provided: fixed-point emulations of the related-work datapaths the paper
+compares against (8-bit integer LayerNorm/GELU/Softmax, SDA's ReLU6-GELU) so
+the comparison tables can be reproduced.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import luts
+from repro.core.mx_types import MXFormat, NonlinearConfig
+from repro.core.quantize import (MXTensor, dequantize, quantize,
+                                 requantize_to_max_exponent)
+
+_LOG2E = 1.4426950408889634
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _quantize_with_exponent(y: jnp.ndarray, exponent: jnp.ndarray,
+                            block: int, axis: int, mant_bits: int) -> MXTensor:
+    """Quantize ``y`` onto a *given* per-block exponent (paper: GELU forwards
+    the input exponent to the output)."""
+    axis = axis % y.ndim
+    scale = jnp.exp2(-exponent.astype(jnp.float32))
+    scale = jnp.repeat(scale, block, axis=axis)
+    m = jnp.clip(jnp.round(y * scale),
+                 -(2 ** (mant_bits - 1)), 2 ** (mant_bits - 1) - 1)
+    fmt = MXFormat(mant_bits=mant_bits, block_size=block)
+    return MXTensor(m.astype(fmt.mant_dtype), exponent, axis - y.ndim,
+                    mant_bits, block)
+
+
+def _rsqrt_datapath(var: jnp.ndarray, lut_bits: int) -> jnp.ndarray:
+    """Paper Eq. 8-9: 1/sqrt(var) via mantissa LUT + exponent shift.
+
+    var is a positive fixed-point value (float-emulated).  Returns the
+    approximated 1/sqrt(var).
+    """
+    # Guard the Var -> 0 corner the paper ignores (DESIGN.md §8): clamp to
+    # one LSB of the accumulator.
+    var = jnp.maximum(var, 2.0 ** -24)
+    v_m, v_e = jnp.frexp(var)          # var = v_m * 2^v_e, v_m in [0.5, 1)
+    v_m = v_m * 2.0                    # normalize to [1, 2)
+    v_e = v_e - 1
+    odd = (v_e % 2) != 0
+    u = jnp.where(odd, v_m * 0.5, v_m)             # [0.5, 2)
+    e_half = jnp.where(odd, (v_e + 1) // 2, v_e // 2)
+    lut = luts.rsqrt_lut(lut_bits)
+    r = jnp.take(lut, luts.rsqrt_index(u, lut_bits))
+    return r * jnp.exp2(-e_half.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (paper §III-B-1)
+# ---------------------------------------------------------------------------
+def mxint_layernorm(x: MXTensor,
+                    gamma: Optional[jnp.ndarray],
+                    beta: Optional[jnp.ndarray],
+                    cfg: NonlinearConfig,
+                    out_fmt: MXFormat,
+                    rms_only: bool = False) -> MXTensor:
+    """MXInt LayerNorm over the last axis (Fig 3 datapath).
+
+    The shared exponent lambda cancels exactly between the centered value and
+    sqrt(Var) (Eq. 5-7 with eps ~= 0), so the whole datapath runs on integer
+    mantissas; the only non-integer stage is the tiny 1/sqrt LUT.
+
+    ``rms_only=True`` gives the RMSNorm variant (no mean subtraction) used by
+    the LM architectures — same datapath minus the centering adder.
+    """
+    m, _lam = requantize_to_max_exponent(x, axis=-1)   # int32; lambda cancels
+    mf = m.astype(jnp.float32)                          # fixed-point emulation
+    if rms_only:
+        centered = mf
+    else:
+        mean = jnp.mean(mf, axis=-1, keepdims=True)
+        centered = mf - mean
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = _rsqrt_datapath(var, cfg.ln_lut_bits)
+    y = centered * inv
+    if gamma is not None:
+        y = y * gamma
+    if beta is not None and not rms_only:
+        y = y + beta
+    return quantize(y, out_fmt, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GELU (paper §III-B-2)
+# ---------------------------------------------------------------------------
+def mxint_gelu(x: MXTensor, cfg: NonlinearConfig,
+               out_mant_bits: Optional[int] = None) -> MXTensor:
+    """MXInt GELU (Eq. 12 / Fig 6).
+
+    ReLU tails outside [-a, a]; LUT inside.  The input block exponent is
+    forwarded unchanged to the output (paper: "the exponent value does not
+    change and is directly forwarded").
+    """
+    a = float(cfg.gelu_domain)
+    bits = cfg.gelu_index_bits                           # Fig 6: k index bits
+    xf = dequantize(x)                                   # (m, e) -> fixed point
+    lut = luts.gelu_lut(bits, a)
+    y_small = jnp.take(lut, luts.gelu_index(xf, bits, a))
+    y = jnp.where(xf >= a, xf, jnp.where(xf <= -a, 0.0, y_small))
+    out_bits = out_mant_bits or x.mant_bits
+    return _quantize_with_exponent(y, x.exponent, x.block_size,
+                                   x.scale_axis, out_bits)
+
+
+def mxint_silu(x: MXTensor, cfg: NonlinearConfig,
+               out_mant_bits: Optional[int] = None) -> MXTensor:
+    """SiLU via the same 3-piece LUT datapath (LM archs use SiLU/SwiGLU).
+
+    silu(x) = x * sigmoid(x) has the same asymptotics as GELU (x for large x,
+    0 for very negative x) so the paper's Eq. 12 structure applies verbatim;
+    only the table contents differ.  SiLU's negative tail decays slower
+    (silu(-3) = -0.142 vs gelu(-3) = -0.004), so the LUT domain is doubled —
+    exactly the "different results of bitwidth [for] other ML models" the
+    paper anticipates (§III-B).  Beyond-paper extension, DESIGN.md §6.
+    """
+    a = 2.0 * float(cfg.gelu_domain)
+    bits = cfg.gelu_index_bits + 1                       # keep resolution
+    xf = dequantize(x)
+    n = 2 ** bits
+    import numpy as np
+    centers = -a + (2.0 * a / n) * (np.arange(n) + 0.5)
+    lut = jnp.asarray(centers / (1.0 + np.exp(-centers)), dtype=jnp.float32)
+    y_small = jnp.take(lut, luts.gelu_index(xf, bits, a))
+    y = jnp.where(xf >= a, xf, jnp.where(xf <= -a, 0.0, y_small))
+    out_bits = out_mant_bits or x.mant_bits
+    return _quantize_with_exponent(y, x.exponent, x.block_size,
+                                   x.scale_axis, out_bits)
+
+
+# ---------------------------------------------------------------------------
+# Softmax (paper §III-B-3)
+# ---------------------------------------------------------------------------
+def exp_datapath(z: jnp.ndarray, r_bits: int) -> jnp.ndarray:
+    """e^x ~= 2^n * LUT_pow2(r) for z = x*log2(e) <= 0 (Eq. 14-19).
+
+    Returns (p_m, n): mantissa in [1,2) and integer exponent, as the hardware
+    would hand them to the divider, packed here as p_m * 2^n in float.
+    """
+    n = jnp.floor(z)
+    r = z - n                                           # [0, 1)
+    lut = luts.pow2_lut(r_bits)
+    p_m = jnp.take(lut, luts.pow2_index(r, r_bits))      # [1, 2)
+    n = jnp.maximum(n, -126.0)                           # flush denormals
+    return p_m * jnp.exp2(n)
+
+
+def mxint_softmax(x: MXTensor, cfg: NonlinearConfig, out_fmt: MXFormat,
+                  axis: int = -1) -> MXTensor:
+    """MXInt softmax along ``axis`` (must be the block axis).
+
+    Datapath: requantize row to max exponent -> integer max-subtract ->
+    z = t*log2(e) (constant fixed-point multiply) -> 2^n * LUT_pow2(r) ->
+    accumulate -> divide in (mantissa, exponent) form (Eq. 20).
+    """
+    m, lam = requantize_to_max_exponent(x, axis=axis)
+    m_max = jnp.max(m, axis=axis, keepdims=True)
+    t = (m - m_max).astype(jnp.float32)                  # <= 0, mantissa units
+    z = t * jnp.exp2(lam.astype(jnp.float32)) * _LOG2E   # x*log2(e) <= 0
+    p = exp_datapath(z, cfg.softmax_r_bits)
+    s = jnp.sum(p, axis=axis, keepdims=True)
+    # Division in (mantissa, exponent) form: y = (p_m/s_m) * 2^(p_e - s_e).
+    # Emulated by normalizing the accumulator through frexp, exactly what the
+    # hardware's leading-zero-count + shift does.
+    s_m, s_e = jnp.frexp(s)
+    y = (p / s_m) * jnp.exp2(-s_e.astype(jnp.float32))
+    return quantize(y, out_fmt, axis=axis)
+
+
+def softmax_value(x: jnp.ndarray, cfg: NonlinearConfig,
+                  act_fmt: MXFormat, out_fmt: Optional[MXFormat] = None,
+                  axis: int = -1) -> jnp.ndarray:
+    """Convenience: float in -> MXInt softmax datapath -> float out."""
+    xq = quantize(x, act_fmt, axis=axis)
+    return dequantize(mxint_softmax(xq, cfg, out_fmt or act_fmt, axis=axis))
+
+
+def layernorm_value(x: jnp.ndarray, gamma, beta, cfg: NonlinearConfig,
+                    act_fmt: MXFormat, rms_only: bool = False) -> jnp.ndarray:
+    xq = quantize(x, act_fmt, axis=-1)
+    return dequantize(mxint_layernorm(xq, gamma, beta, cfg, act_fmt,
+                                      rms_only=rms_only))
+
+
+def gelu_value(x: jnp.ndarray, cfg: NonlinearConfig,
+               act_fmt: MXFormat) -> jnp.ndarray:
+    xq = quantize(x, act_fmt, axis=-1)
+    return dequantize(mxint_gelu(xq, cfg))
+
+
+def silu_value(x: jnp.ndarray, cfg: NonlinearConfig,
+               act_fmt: MXFormat) -> jnp.ndarray:
+    xq = quantize(x, act_fmt, axis=-1)
+    return dequantize(mxint_silu(xq, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Related-work datapaths (for Tables II-IV): 8-bit fixed point emulations.
+# ---------------------------------------------------------------------------
+def _fixed_point_qdq(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric per-tensor fixed-point quantize-dequantize."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / (2 ** (bits - 1) - 1)
+    return jnp.clip(jnp.round(x / scale),
+                    -(2 ** (bits - 1)), 2 ** (bits - 1) - 1) * scale
+
+
+def fixedpoint_layernorm(x: jnp.ndarray, gamma, beta, bits: int = 8,
+                         eps: float = 1e-6) -> jnp.ndarray:
+    """Integer-datapath LayerNorm a la Huang et al. [9] / SDA [5]."""
+    xq = _fixed_point_qdq(x, bits)
+    mean = jnp.mean(xq, axis=-1, keepdims=True)
+    var = jnp.var(xq, axis=-1, keepdims=True)
+    y = (xq - mean) / jnp.sqrt(var + eps)
+    if gamma is not None:
+        y = y * gamma
+    if beta is not None:
+        y = y + beta
+    return _fixed_point_qdq(y, bits)
+
+
+def fixedpoint_gelu(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Polynomial-erf integer GELU a la HeatViT [2] / [9] (Eq. 11)."""
+    xq = _fixed_point_qdq(x, bits)
+    # I-BERT style 2nd-order polynomial erf approximation.
+    a, b, c = -0.2888, -1.769, 1.0
+    s = jnp.sign(xq)
+    xa = jnp.minimum(jnp.abs(xq / jnp.sqrt(2.0)), -b)
+    l_erf = s * (a * (xa + b) ** 2 + c)
+    y = xq * 0.5 * (1.0 + l_erf)
+    return _fixed_point_qdq(y, bits)
+
+
+def relu6_gelu(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """SDA [5]: GELU approximated as ReLU6 — loses accuracy on ViTs."""
+    xq = _fixed_point_qdq(x, bits)
+    return _fixed_point_qdq(jnp.clip(xq, 0.0, 6.0), bits)
+
+
+def fixedpoint_softmax(x: jnp.ndarray, bits: int = 8,
+                       axis: int = -1) -> jnp.ndarray:
+    """Max-subtract integer softmax a la I-ViT [23] / HeatViT [2]."""
+    xq = _fixed_point_qdq(x, bits)
+    z = (xq - jnp.max(xq, axis=axis, keepdims=True)) * _LOG2E   # <= 0
+    # I-ViT ShiftExp: z = n + r with r in (-1, 0]; 2^r ~= 1 + r/2 (exact at
+    # both endpoints, shift-friendly).
+    n = jnp.ceil(z)
+    r = z - n
+    p = (1.0 + 0.5 * r) * jnp.exp2(jnp.maximum(n, -126.0))
+    y = p / jnp.sum(p, axis=axis, keepdims=True)
+    return _fixed_point_qdq(y, bits)

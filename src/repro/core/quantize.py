@@ -1,0 +1,215 @@
+"""MXInt quantization: block-shared exponent + integer mantissa.
+
+Quantization of a block b with elements x_i:
+
+    amax    = max_i |x_i|
+    e_b     = floor(log2(amax)) - (mant_bits - 2)        # so amax maps into
+                                                         # [2^(m-2), 2^(m-1))
+    m_i     = clip(round(x_i * 2^-e_b), -2^(m-1), 2^(m-1)-1)
+    x_i_hat = m_i * 2^e_b                                 # paper Eq. 2
+
+The shared exponent is stored as a signed int8 (equivalent to the paper's
+8-bit biased exponent).  Blocks are taken along one axis; the block axis is
+always the *contraction/feature* axis so that shared exponents never straddle
+a sharded dimension (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mx_types import MXFormat
+
+_EXP_MIN, _EXP_MAX = -127, 127
+
+
+class MXTensor(NamedTuple):
+    """A packed MXInt tensor.
+
+    mantissa: integer array, same shape as the source tensor.
+    exponent: int8 array; shape equals the source shape with the block axis
+      divided by ``block_size`` (ceil).
+    scale_axis: the axis along which blocks were formed, stored NEGATIVE
+      (from the end) so that slicing a leading stacked-layers dim (lax.scan
+      over units) leaves the static axis valid.
+    mant_bits: element mantissa width (static).
+    block_size: static block size actually used (may be clamped to the dim).
+    """
+
+    mantissa: jnp.ndarray
+    exponent: jnp.ndarray
+    scale_axis: int
+    mant_bits: int
+    block_size: int
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.mantissa.shape
+
+    @property
+    def bits_per_element(self) -> float:
+        return self.mant_bits + 8.0 / self.block_size
+
+    def nbytes_packed(self) -> int:
+        """Bytes this tensor occupies in packed storage (sub-byte mantissas
+        counted at their true bit cost, as dense bit-packing would give)."""
+        n = self.mantissa.size
+        return int((n * self.mant_bits + self.exponent.size * 8 + 7) // 8)
+
+
+jax.tree_util.register_pytree_node(
+    MXTensor,
+    lambda t: ((t.mantissa, t.exponent),
+               (t.scale_axis, t.mant_bits, t.block_size)),
+    lambda aux, leaves: MXTensor(leaves[0], leaves[1], *aux),
+)
+
+
+def _resolve_block(dim: int, block_size: int) -> int:
+    """Clamp block size to the dimension (granite d_ff=512 w/ block 256 is
+    fine; d=10 w/ block 16 clamps to 10)."""
+    if dim >= block_size and dim % block_size == 0:
+        return block_size
+    if dim < block_size:
+        return dim
+    # find the largest divisor of dim that is <= block_size
+    for b in range(block_size, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+def _blockwise(x: jnp.ndarray, axis: int, block: int) -> jnp.ndarray:
+    """Reshape so the block axis splits into (nblocks, block) at ``axis``."""
+    axis = axis % x.ndim
+    d = x.shape[axis]
+    new_shape = x.shape[:axis] + (d // block, block) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def _shared_exponent(amax: jnp.ndarray, mant_bits: int) -> jnp.ndarray:
+    """e = floor(log2(amax)) - (mant_bits - 2), saturated to int8 range."""
+    # frexp: amax = f * 2^k with f in [0.5, 1) => floor(log2(amax)) = k - 1.
+    _, k = jnp.frexp(jnp.maximum(amax, jnp.finfo(jnp.float32).tiny))
+    e = k - 1 - (mant_bits - 2)
+    e = jnp.where(amax > 0, e, 0)
+    return jnp.clip(e, _EXP_MIN, _EXP_MAX).astype(jnp.int8)
+
+
+def quantize(x: jnp.ndarray, fmt: MXFormat, axis: int = -1) -> MXTensor:
+    """Quantize ``x`` to MXInt along ``axis``."""
+    x = x.astype(jnp.float32)
+    axis = axis % x.ndim
+    block = _resolve_block(x.shape[axis], fmt.block_size)
+    xb = _blockwise(x, axis, block)                      # (..., nb, block, ...)
+    amax = jnp.max(jnp.abs(xb), axis=axis + 1)           # (..., nb, ...)
+    e = _shared_exponent(amax, fmt.mant_bits)
+    scale = jnp.exp2(-e.astype(jnp.float32))
+    m = jnp.round(xb * jnp.expand_dims(scale, axis + 1))
+    m = jnp.clip(m, fmt.mant_min, fmt.mant_max)
+    m = m.reshape(x.shape).astype(fmt.mant_dtype)
+    return MXTensor(m, e, axis - x.ndim, fmt.mant_bits, block)
+
+
+def dequantize(t: MXTensor, dtype=jnp.float32) -> jnp.ndarray:
+    """Reconstruct x = m * 2^e."""
+    scale = jnp.exp2(t.exponent.astype(jnp.float32))
+    scale = jnp.repeat(scale, t.block_size, axis=t.scale_axis)
+    return (t.mantissa.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_dequantize(x: jnp.ndarray, fmt: MXFormat, axis: int = -1) -> jnp.ndarray:
+    return dequantize(quantize(x, fmt, axis), dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization with straight-through gradients (QAT / fast sweeps).
+# ---------------------------------------------------------------------------
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def fake_quant(x: jnp.ndarray, mant_bits: int, block_size: int, axis: int):
+    fmt = MXFormat(mant_bits=mant_bits, block_size=block_size)
+    return quantize_dequantize(x, fmt, axis)
+
+
+def _fq_fwd(x, mant_bits, block_size, axis):
+    return fake_quant(x, mant_bits, block_size, axis), None
+
+
+def _fq_bwd(mant_bits, block_size, axis, _, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Baseline-format emulations (Table V comparisons).
+# ---------------------------------------------------------------------------
+def per_tensor_int_qdq(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric per-tensor integer quantization (the paper's IntN rows)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    s = amax / (2 ** (bits - 1) - 1)
+    return (jnp.clip(jnp.round(x / s), -(2 ** (bits - 1)),
+                     2 ** (bits - 1) - 1) * s).astype(x.dtype)
+
+
+def fp8_e4m3_qdq(x: jnp.ndarray) -> jnp.ndarray:
+    """e4m3 emulation: 3 explicit mantissa bits, saturate at +-448."""
+    xf = jnp.asarray(x, jnp.float32)
+    m, e = jnp.frexp(xf)
+    e = jnp.clip(e, -6, 9)
+    scale = jnp.exp2(3.0 - e.astype(jnp.float32))
+    q = jnp.round(xf * scale) / scale
+    return jnp.clip(q, -448.0, 448.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Re-quantization to a common exponent (paper Eq. 3, Fig. 3 first stage).
+# ---------------------------------------------------------------------------
+def requantize_to_max_exponent(t: MXTensor, axis: int = -1):
+    """Force every block along ``axis`` onto the row-max exponent by
+    arithmetic right-shift of the mantissas (paper Eq. 3).
+
+    Returns (shifted mantissas as int32, lambda exponent with the reduced
+    axis kept at size 1).  This is the lossy alignment step the non-linear
+    datapaths start from; the shift truncates low bits exactly as the
+    hardware barrel shifter would.
+    """
+    axis = axis % t.mantissa.ndim
+    if axis != t.scale_axis % t.mantissa.ndim:
+        raise ValueError("requantize must reduce along the block axis")
+    e_max = jnp.max(t.exponent, axis=axis, keepdims=True)
+    shift = (e_max - t.exponent).astype(jnp.int32)       # >= 0
+    shift = jnp.repeat(shift, t.block_size, axis=axis)
+    m = jnp.right_shift(t.mantissa.astype(jnp.int32), jnp.minimum(shift, 31))
+    return m, e_max.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Packed-plane helpers (serving path): a weight is stored as two leaves.
+# ---------------------------------------------------------------------------
+def pack_weight(w: jnp.ndarray, fmt: MXFormat, axis: int = 0) -> MXTensor:
+    """Quantize a parameter for packed serving storage.
+
+    ``axis`` is the contraction dimension (first dim of a (d_in, d_out)
+    kernel) so each output feature's blocks run along the reduction — the
+    layout `mxint_matmul` consumes.
+    """
+    return quantize(w, fmt, axis=axis)
+
+
+def packed_bytes(tree) -> int:
+    """Total packed bytes of a pytree that may mix MXTensor and arrays."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda l: isinstance(l, MXTensor)):
+        if isinstance(leaf, MXTensor):
+            total += leaf.nbytes_packed()
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLMData, SyntheticImageData,
+                                 SyntheticSeq2SeqData, DataState)

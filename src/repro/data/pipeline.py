@@ -1,0 +1,161 @@
+"""Deterministic synthetic data pipelines.
+
+Production properties kept even though the data is synthetic:
+  * deterministic and seekable — batch i is a pure function of (seed, i), so
+    resuming from a checkpoint replays the exact stream (the DataState is
+    part of the checkpoint);
+  * host-shardable — each data-parallel host can build only its slice
+    (shard_index / num_shards);
+  * learnable structure — LM streams are Markov-chain token sequences (so a
+    real training run shows loss going down), image streams are class-
+    conditional Gaussian blobs (so DeiT PTQ experiments have a real signal
+    to lose).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataState:
+    seed: int
+    next_index: int
+
+    def to_dict(self):
+        return {"seed": self.seed, "next_index": self.next_index}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(seed=int(d["seed"]), next_index=int(d["next_index"]))
+
+
+class _Seekable:
+    def __init__(self, seed: int, shard_index: int = 0, num_shards: int = 1):
+        self.state = DataState(seed=seed, next_index=0)
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+
+    def _rng_for(self, index: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence(
+                entropy=self.state.seed,
+                spawn_key=(index, self.shard_index)))
+
+    def batch_at(self, index: int) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        b = self.batch_at(self.state.next_index)
+        self.state.next_index += 1
+        return b
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+
+class SyntheticLMData(_Seekable):
+    """Markov-chain token stream with vocab bucketing (learnable bigrams)."""
+
+    def __init__(self, *, vocab: int, batch: int, seq_len: int, seed: int = 0,
+                 shard_index: int = 0, num_shards: int = 1,
+                 vision_tokens: int = 0, vision_dim: int = 0,
+                 structure_seed: int = 1234):
+        super().__init__(seed, shard_index, num_shards)
+        self.vocab = vocab
+        self.batch = batch // num_shards
+        self.seq = seq_len
+        self.vision_tokens = vision_tokens
+        self.vision_dim = vision_dim
+        # the TASK (transition structure) is fixed by structure_seed so that
+        # train and eval streams with different sample seeds share it
+        g = np.random.default_rng(structure_seed)
+        self._succ = g.integers(0, vocab, size=(vocab, 4))
+
+    def batch_at(self, index: int) -> Dict[str, jnp.ndarray]:
+        rng = self._rng_for(index)
+        toks = np.empty((self.batch, self.seq), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, self.batch)
+        choices = rng.integers(0, 4, size=(self.batch, self.seq))
+        noise = rng.random((self.batch, self.seq)) < 0.05
+        rand_tok = rng.integers(0, self.vocab, size=(self.batch, self.seq))
+        for t in range(1, self.seq):
+            nxt = self._succ[toks[:, t - 1], choices[:, t]]
+            toks[:, t] = np.where(noise[:, t], rand_tok[:, t], nxt)
+        out = {"tokens": jnp.asarray(toks)}
+        if self.vision_tokens:
+            out["vision_embeds"] = jnp.asarray(
+                rng.normal(size=(self.batch, self.vision_tokens,
+                                 self.vision_dim)).astype(np.float32))
+        return out
+
+
+class SyntheticSeq2SeqData(_Seekable):
+    """Frame embeddings -> token targets for the enc-dec arch."""
+
+    def __init__(self, *, vocab: int, batch: int, seq_len: int, d_model: int,
+                 seed: int = 0, shard_index: int = 0, num_shards: int = 1):
+        super().__init__(seed, shard_index, num_shards)
+        self.vocab = vocab
+        self.batch = batch // num_shards
+        self.seq = seq_len
+        self.d = d_model
+
+    def batch_at(self, index: int) -> Dict[str, jnp.ndarray]:
+        rng = self._rng_for(index)
+        toks = rng.integers(0, self.vocab,
+                            size=(self.batch, self.seq)).astype(np.int32)
+        # frames correlate with the tokens (projected one-hot + noise)
+        proj = np.random.default_rng(self.state.seed).normal(
+            size=(64, self.d)).astype(np.float32)
+        frames = proj[toks % 64] + 0.1 * rng.normal(
+            size=(self.batch, self.seq, self.d)).astype(np.float32)
+        return {"tokens": jnp.asarray(toks), "frames": jnp.asarray(frames)}
+
+
+class SyntheticImageData(_Seekable):
+    """Class-conditional Gaussian-blob images (learnable 10..1000-way)."""
+
+    def __init__(self, *, n_classes: int, batch: int, image_size: int,
+                 seed: int = 0, shard_index: int = 0, num_shards: int = 1,
+                 structure_seed: int = 1234, noise: float = 0.35,
+                 outlier_channels: bool = False, class_sep: float = 1.0):
+        super().__init__(seed, shard_index, num_shards)
+        self.n_classes = n_classes
+        self.batch = batch // num_shards
+        self.hw = image_size
+        self.noise = noise
+        # class prototypes are the TASK: fixed by structure_seed, shared by
+        # train and eval streams regardless of their sample seed.
+        # class_sep < 1 makes classes share a base pattern with small
+        # per-class deltas — thin decision margins, so quantization error
+        # becomes visible in accuracy (the paper's Table V regime).
+        g = np.random.default_rng(structure_seed)
+        base = g.normal(size=(1, 8, 8, 3)).astype(np.float32)
+        delta = g.normal(size=(n_classes, 8, 8, 3)).astype(np.float32)
+        if outlier_channels:
+            # the outlier channel carries NO class information — like the
+            # high-magnitude, class-uninformative activation dims of real
+            # ViTs; per-tensor int quantization sets its LSB from the
+            # outliers and crushes the thin class signal elsewhere.
+            delta[..., 2] = 0.0
+        self._proto = base + class_sep * delta
+        # heavy-tailed channel scales emulate the activation-outlier
+        # phenomenon of real ViTs that breaks per-tensor int quantization
+        self._scale = (np.asarray([1.0, 1.0, 24.0], np.float32)
+                       if outlier_channels else np.ones(3, np.float32))
+
+    def batch_at(self, index: int) -> Dict[str, jnp.ndarray]:
+        rng = self._rng_for(index)
+        labels = rng.integers(0, self.n_classes, self.batch).astype(np.int32)
+        base = self._proto[labels]                      # (b, 8, 8, 3)
+        reps = self.hw // 8
+        img = np.repeat(np.repeat(base, reps, axis=1), reps, axis=2)
+        img = img + self.noise * rng.normal(size=img.shape).astype(np.float32)
+        img = img * self._scale
+        return {"images": jnp.asarray(img), "labels": jnp.asarray(labels)}

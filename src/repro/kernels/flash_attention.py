@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: blocked (flash) attention with optional MXInt softmax.
+
+Online-softmax attention over (batch*heads, seq, head_dim) operands with
+BlockSpec VMEM tiling:
+
+  grid = (bh, q_blocks, k_blocks), k innermost; running max / sum / output
+  accumulator live in VMEM scratch across the k dimension.
+
+``exp_mode``:
+  'float'  — exact exp (standard flash attention; the Float baseline).
+  'mxint'  — the paper's Eq. 14-19 datapath: 2^n * LUT_pow2(r) with r_bits
+             fractional bits, applied to both the new-block exponentials and
+             the running-accumulator rescale (both arguments are <= 0, the
+             datapath's domain).  This is the paper's softmax embedded in a
+             fused attention kernel — beyond-paper: the FPGA design streams
+             whole rows, while the TPU version never materializes the
+             (Sq, Sk) score matrix at all.
+
+Supports causal masking and sliding-window (SWA) masking — window > 0 masks
+keys older than ``window`` positions (Mixtral-style).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import luts
+from repro.kernels.mxint_softmax import exp2_datapath
+
+_LOG2E = 1.4426950408889634
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, lut_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, window: int, exp_mode: str,
+                  r_bits: int, block_q: int, block_k: int, n_k: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, _NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)                       # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                       # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_sc[...]                                     # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+
+    if exp_mode == "mxint":
+        # p through the paper's LUT datapath.  The running rescale alpha is
+        # kept exact: the FPGA design is row-at-once and never rescales, so
+        # quantizing alpha would compound LUT error across k blocks with no
+        # hardware analogue — exact alpha is the faithful blocked reading.
+        p = exp2_datapath((s - m_new) * _LOG2E, lut_ref[...], r_bits)
+    else:
+        p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, p, 0.0)
+    # fully-masked row guard (SWA can mask a whole block)
+    alpha = jnp.where(m_prev <= _NEG_INF / 2, 0.0, alpha)
+
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _flush():
+        l = l_sc[...]
+        # Eq. 20: division in (mantissa, exponent) form
+        l_m, l_e = jnp.frexp(jnp.maximum(l, 1e-30))
+        o = acc_sc[...] / l_m * jnp.exp2(-l_e.astype(jnp.float32))
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "exp_mode", "r_bits", "block_q", "block_k", "scale",
+    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    exp_mode: str = "float", r_bits: int = 2,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, D); k, v: (BH, Sk, D).  Returns (BH, Sq, D)."""
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    n_k = sk // block_k
+    lut = luts.pow2_lut(r_bits)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        exp_mode=exp_mode, r_bits=r_bits, block_q=block_q, block_k=block_k,
+        n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // block_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((lut.shape[0],), lambda b, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lut)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: MXInt LayerNorm / RMSNorm datapath (paper Fig. 3).
+
+Stages inside one kernel invocation (a (rows_block, d) tile resident in
+VMEM):
+
+  1. block-quantize the activation row to MXInt (act_block shared exponents),
+  2. requantize every block to the row-max exponent — integer right shifts,
+  3. integer mean / variance on mantissas (lambda cancels, Eq. 5-7),
+  4. variance -> (v_m, v_e); 1/sqrt via the tiny LUT with the even/odd
+     exponent split of Eq. 9; exponent handled by shift,
+  5. scale, gamma/beta, write.
+
+The LUT lives in VMEM and is applied as a one-hot contraction — on TPU a
+32-entry lookup over a (rows, d) tile is a (rows*d, 32) x (32,) matvec, which
+the MXU eats for free; this is the TPU-native analogue of the FPGA LUT
+(DESIGN.md §2) and is bit-identical to `jnp.take` (one-hot rows select a
+single f32 entry exactly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import luts
+
+
+def lut_lookup(idx: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """One-hot-matmul LUT gather (MXU-friendly, exact)."""
+    entries = table.shape[0]
+    onehot = (idx[..., None] == jnp.arange(entries, dtype=jnp.int32)
+              ).astype(table.dtype)
+    return jax.lax.dot_general(
+        onehot.reshape(-1, entries), table[:, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(idx.shape)
+
+
+def block_quantize_rows(x: jnp.ndarray, block: int, mant_bits: int):
+    """Quantize (rows, d) along d in blocks; returns (mantissa f32, exp i32)."""
+    r, d = x.shape
+    xb = x.reshape(r, d // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    _, k = jnp.frexp(jnp.maximum(amax, jnp.finfo(jnp.float32).tiny))
+    e = jnp.where(amax > 0, k - 1 - (mant_bits - 2), 0)
+    e = jnp.clip(e, -127, 127)
+    lim = float(2 ** (mant_bits - 1) - 1)
+    m = jnp.clip(jnp.round(xb * jnp.exp2(-e.astype(jnp.float32))[..., None]),
+                 -lim, lim)
+    return m, e.astype(jnp.int32)                      # (r, nb, blk), (r, nb)
+
+
+def requantize_rows(m: jnp.ndarray, e: jnp.ndarray):
+    """Align all blocks of each row to the row-max exponent (Eq. 3)."""
+    e_max = jnp.max(e, axis=-1, keepdims=True)
+    shift = jnp.minimum(e_max - e, 31)
+    # arithmetic right shift on integer-valued f32 mantissas:
+    # floor-divide matches >> for the int32 the hardware holds.
+    mi = jnp.floor_divide(m.astype(jnp.int32),
+                          (1 << shift)[..., None].astype(jnp.int32))
+    return mi.astype(jnp.float32), e_max
+
+
+def _rsqrt_lut_stage(var: jnp.ndarray, table: jnp.ndarray, bits: int):
+    var = jnp.maximum(var, 2.0 ** -24)
+    v_m, v_e = jnp.frexp(var)
+    v_m, v_e = v_m * 2.0, v_e - 1
+    odd = (v_e % 2) != 0
+    u = jnp.where(odd, v_m * 0.5, v_m)
+    e_half = jnp.where(odd, (v_e + 1) // 2, v_e // 2)
+    n = 2 ** bits
+    idx = jnp.clip(jnp.floor((u - 0.5) * (n / 1.5)).astype(jnp.int32), 0, n - 1)
+    r = lut_lookup(idx, table)
+    return r * jnp.exp2(-e_half.astype(jnp.float32))
+
+
+def _mxint_layernorm_kernel(x_ref, g_ref, b_ref, lut_ref, o_ref, *,
+                            act_block: int, mant_bits: int, lut_bits: int,
+                            rms_only: bool):
+    x = x_ref[...].astype(jnp.float32)                 # (br, d)
+    m, e = block_quantize_rows(x, act_block, mant_bits)
+    mf, _ = requantize_rows(m, e)                      # lambda cancels
+    mf = mf.reshape(x.shape)
+    if rms_only:
+        centered = mf
+    else:
+        centered = mf - jnp.mean(mf, axis=-1, keepdims=True)
+    var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+    inv = _rsqrt_lut_stage(var, lut_ref[...], lut_bits)
+    y = centered * inv
+    y = y * g_ref[...][None, :]
+    if not rms_only:
+        y = y + b_ref[...][None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "act_block", "mant_bits", "lut_bits", "rms_only", "block_rows",
+    "interpret"))
+def mxint_layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, *,
+                    act_block: int = 16, mant_bits: int = 8,
+                    lut_bits: int = 5, rms_only: bool = False,
+                    block_rows: int = 256, interpret: bool = True):
+    """(rows, d) MXInt LayerNorm over the last axis."""
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    assert d % min(act_block, d) == 0
+    act_block = min(act_block, d)
+    lut = luts.rsqrt_lut(lut_bits)
+
+    kernel = functools.partial(
+        _mxint_layernorm_kernel, act_block=act_block, mant_bits=mant_bits,
+        lut_bits=lut_bits, rms_only=rms_only)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((lut.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta, lut)

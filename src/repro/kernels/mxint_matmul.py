@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: MXInt matmul (paper Fig. 2b, adapted to the MXU).
+
+The paper's dot-product unit multiplies integer mantissas and applies ONE
+dynamic shift per block (the shared-exponent product).  The TPU-native
+reading of that datapath:
+
+  * weight mantissas live in HBM as int8 planes; the shared exponents are a
+    (K/B, N) int8 plane — HBM->VMEM traffic is the *quantized* bytes, which
+    is the paper's memory win, preserved;
+  * inside the kernel each (bk, bn) mantissa tile is scaled by
+    2^exponent once per block — the "one dynamic shift per block", expressed
+    as a broadcasted `exp2` multiply feeding the MXU;
+  * optionally the activation tile is block-quantized in-register and the
+    product runs as int8 x int8 -> int32 on the MXU (2x peak vs bf16), with
+    the combined scale 2^(e_x + e_w) applied on the int32 tile — the full
+    integer-only datapath of Fig. 2b;
+  * accumulation is a f32 VMEM scratch across the K grid dimension
+    (TPU gives a lossless >=int32 accumulator for free; the paper's 12-bit
+    accumulator DSE is subsumed — DESIGN.md §2).
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the accumulator stays resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _broadcast_block_exp(e_tile: jnp.ndarray, block: int) -> jnp.ndarray:
+    """(kb, bn) int8 exponents -> (kb*block, bn) f32 scales, 2^e."""
+    kb, bn = e_tile.shape
+    s = jnp.exp2(e_tile.astype(jnp.float32))
+    s = jnp.broadcast_to(s[:, None, :], (kb, block, bn))
+    return s.reshape(kb * block, bn)
+
+
+def _quantize_act_tile(x: jnp.ndarray, block: int, mant_bits: int):
+    """In-register block quantization of an activation tile along K.
+
+    Returns (int mantissa tile as f32-exact ints, per-block scale 2^e with
+    shape (bm, bk/block)).  Mirrors repro.core.quantize numerics exactly.
+    """
+    bm, bk = x.shape
+    xb = x.reshape(bm, bk // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)                      # (bm, kb)
+    _, k = jnp.frexp(jnp.maximum(amax, jnp.finfo(jnp.float32).tiny))
+    e = k - 1 - (mant_bits - 2)
+    e = jnp.where(amax > 0, e, 0)
+    e = jnp.clip(e, -127, 127)
+    scale = jnp.exp2(-e.astype(jnp.float32))
+    lim = float(2 ** (mant_bits - 1) - 1)
+    m = jnp.clip(jnp.round(xb * scale[..., None]), -lim, lim)
+    return m.reshape(bm, bk), jnp.exp2(e.astype(jnp.float32))
+
+
+def _mxint_matmul_kernel(x_ref, wm_ref, we_ref, o_ref, acc_ref, *,
+                         w_block: int, act_block: int, act_mant_bits: int,
+                         quantize_act: bool, n_k: int):
+    """One (bm, bn) output tile; K accumulated across grid dim 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                        # (bm, bk)
+    wm = wm_ref[...].astype(jnp.float32)                      # (bk, bn) ints
+    w_scale = _broadcast_block_exp(we_ref[...], w_block)      # (bk, bn)
+
+    if quantize_act:
+        # Full integer datapath: int mantissas into the MXU, one combined
+        # scale per (act-block x weight-block) pair.
+        xm, x_scale = _quantize_act_tile(x, act_block, act_mant_bits)
+        # Fold the per-(row x K-block) activation scale into the mantissas,
+        # then one MXU contraction per tile.  On real TPU hardware this is
+        # the int8 x int8 -> int32 MXU path with the combined 2^(e_x + e_w)
+        # applied to the int32 tile; the f32 emulation here is exact for
+        # <=11-bit mantissa products.
+        bm_, bk_ = xm.shape
+        nb = bk_ // act_block
+        xg = (xm.reshape(bm_, nb, act_block) * x_scale[:, :, None])
+        acc_ref[...] += jax.lax.dot_general(
+            xg.reshape(bm_, bk_), wm * w_scale, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        w = wm * w_scale                                      # dequant once/blk
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "w_block", "act_block", "act_mant_bits", "quantize_act",
+    "bm", "bn", "bk", "interpret", "out_dtype"))
+def mxint_matmul(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray, *,
+                 w_block: int, act_block: int = 16, act_mant_bits: int = 8,
+                 quantize_act: bool = False, bm: int = 128, bn: int = 128,
+                 bk: int = 512, interpret: bool = True,
+                 out_dtype=jnp.float32) -> jnp.ndarray:
+    """y[M,N] = x[M,K] @ (w_mant * 2^w_exp)[K,N] with MXInt weights.
+
+    w_mant: (K, N) int8 mantissas; w_exp: (K/w_block, N) int8 exponents.
+    """
+    M, K = x.shape
+    K2, N = w_mant.shape
+    assert K == K2, (K, K2)
+    assert w_exp.shape == (K // w_block, N), (w_exp.shape, K, w_block, N)
+
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk % w_block == 0 or w_block % bk == 0
+    if quantize_act:
+        assert bk % act_block == 0
+    n_k = K // bk
+
+    if bk >= w_block:
+        kb = bk // w_block
+        we_spec = pl.BlockSpec((kb, bn), lambda i, j, k: (k, j))
+        eff_w_block = w_block
+    else:
+        # several K tiles share one exponent row
+        ratio = w_block // bk
+        we_spec = pl.BlockSpec((1, bn), lambda i, j, k: (k // ratio, j))
+        eff_w_block = bk
+
+    kernel = functools.partial(
+        _mxint_matmul_kernel, w_block=eff_w_block, act_block=act_block,
+        act_mant_bits=act_mant_bits, quantize_act=quantize_act, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            we_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_mant, w_exp)

@@ -1,0 +1,131 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle shape plumbing (leading-dim flattening, row padding to tile
+multiples), backend selection (Pallas compiled on TPU, interpret=True on
+CPU, pure-XLA fallback for odd shapes) and expose the kernels under the
+names the model zoo consumes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mxint_gelu import mxint_gelu as _gelu_kernel
+from repro.kernels.mxint_layernorm import mxint_layernorm as _ln_kernel
+from repro.kernels.mxint_matmul import mxint_matmul as _mm_kernel
+from repro.kernels.mxint_softmax import mxint_softmax as _sm_kernel
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _flatten_rows(x):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pad_rows(x, multiple):
+    rows = x.shape[0]
+    pad = (-rows) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, rows
+
+
+def _pick_block_rows(rows: int, cap: int = 256) -> int:
+    for b in (cap, 128, 64, 32, 16, 8, 4, 2, 1):
+        if b <= cap and rows % b == 0:
+            return b
+    return 1
+
+
+# ---------------------------------------------------------------------------
+def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
+                 bias: jnp.ndarray | None = None, *, w_block: int,
+                 quantize_act: bool = False, act_block: int = 16,
+                 act_mant_bits: int = 8) -> jnp.ndarray:
+    """y = x @ W_mx (+ bias) for arbitrary leading dims of x."""
+    x2, lead = _flatten_rows(x)
+    M, K = x2.shape
+    N = w_mant.shape[1]
+    tiled = (M % 8 == 0 and K % 128 == 0 and N % 128 == 0)
+    if tiled:
+        bm = _pick_block_rows(M, 128)
+        bk = 512 if K % 512 == 0 else 128
+        bn = 128
+        y = _mm_kernel(x2, w_mant, w_exp, w_block=w_block,
+                       act_block=act_block, act_mant_bits=act_mant_bits,
+                       quantize_act=quantize_act, bm=bm, bn=bn, bk=bk,
+                       interpret=_interpret())
+    else:
+        y = ref.mxint_matmul_ref(x2, w_mant, w_exp, w_block=w_block,
+                                 act_block=act_block,
+                                 act_mant_bits=act_mant_bits,
+                                 quantize_act=quantize_act)
+    if bias is not None:
+        y = y + bias
+    return y.reshape(*lead, N).astype(x.dtype)
+
+
+def mxint_layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray,
+                       beta: jnp.ndarray | None = None, *,
+                       act_block: int = 16, mant_bits: int = 8,
+                       lut_bits: int = 5, rms_only: bool = False):
+    x2, lead = _flatten_rows(x)
+    beta_arr = beta if beta is not None else jnp.zeros_like(gamma)
+    x2p, rows = _pad_rows(x2, 8)
+    y = _ln_kernel(x2p, gamma, beta_arr, act_block=act_block,
+                   mant_bits=mant_bits, lut_bits=lut_bits, rms_only=rms_only,
+                   block_rows=_pick_block_rows(x2p.shape[0]),
+                   interpret=_interpret())
+    return y[:rows].reshape(*lead, x.shape[-1])
+
+
+def mxint_softmax_op(x: jnp.ndarray, *, act_block: int = 16,
+                     mant_bits: int = 8, r_bits: int = 2) -> jnp.ndarray:
+    x2, lead = _flatten_rows(x)
+    x2p, rows = _pad_rows(x2, 8)
+    y = _sm_kernel(x2p, act_block=act_block, mant_bits=mant_bits,
+                   r_bits=r_bits, block_rows=_pick_block_rows(x2p.shape[0]),
+                   interpret=_interpret())
+    return y[:rows].reshape(x.shape)
+
+
+def mxint_gelu_op(x: jnp.ndarray, *, fn: str = "gelu", act_block: int = 16,
+                  mant_bits: int = 8, lut_bits: int = 5,
+                  domain: float = 3.0) -> jnp.ndarray:
+    x2, lead = _flatten_rows(x)
+    x2p, rows = _pad_rows(x2, 8)
+    y = _gelu_kernel(x2p, act_block=act_block, mant_bits=mant_bits,
+                     lut_bits=lut_bits, domain=domain, fn=fn,
+                     block_rows=_pick_block_rows(x2p.shape[0]),
+                     interpret=_interpret())
+    return y[:rows].reshape(x.shape)
+
+
+def attention_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                 causal: bool = True, window: int = 0,
+                 exp_mode: str = "float", r_bits: int = 2) -> jnp.ndarray:
+    """(B, H, S, D) attention through the flash kernel."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    if sq % 8 == 0 and sk % 128 == 0 and d % 128 == 0:
+        o = flash_attention(qf, kf, vf, causal=causal, window=window,
+                            exp_mode=exp_mode, r_bits=r_bits,
+                            interpret=_interpret())
+    else:
+        o = ref.attention_ref(qf, kf, vf, causal=causal, window=window,
+                              exp_mode=exp_mode, r_bits=r_bits)
+    return o.reshape(b, h, sq, d)

@@ -1,0 +1,259 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+collective_bytes is not in cost_analysis(), so we parse compiled.as_text():
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes its output-shape bytes.  Collectives that
+live inside `while` bodies (scan-over-layers, chunked attention, microbatch
+accumulation) execute trip_count times; the trip count is recovered from the
+canonical counted-loop condition (`compare(iv, constant(N)), direction=LT`)
+— best-effort, falling back to 1 with a warning flag.
+
+Roofline terms (TPU v5e constants from repro.core.mx_types), using the
+PER-DEVICE numbers XLA reports for the partitioned module:
+
+  compute_s    = device_flops / peak_flops
+  memory_s     = device_bytes / hbm_bw
+  collective_s = device_collective_bytes / ici_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.mx_types import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_WHILE_RE = re.compile(
+    r"=\s+\S+\s+while\(.*?condition=%?([\w.\-]+),.*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    unknown_trip_counts: int = 0
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its op lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", stripped)
+        if m and stripped.endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    """Counted loops compare the induction variable against a constant."""
+    consts = []
+    for ln in cond_lines:
+        if "compare" in ln or "constant" in ln:
+            consts += [int(c) for c in _CONST_RE.findall(ln)]
+    return max(consts) if consts else None
+
+
+def collect_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    stats = CollectiveStats(bytes_by_kind={k: 0.0 for k in _COLLECTIVES},
+                            count_by_kind={k: 0 for k in _COLLECTIVES})
+
+    def visit(comp: str, mult: float, seen: Tuple[str, ...] = ()):
+        if comp not in comps or comp in seen:
+            return
+        for ln in comps[comp]:
+            m = _OP_RE.search(ln)
+            if m:
+                shape_str, kind = m.group(1), m.group(2)
+                stats.bytes_by_kind[kind] += _shape_bytes(shape_str) * mult
+                stats.count_by_kind[kind] += 1
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                if trips is None:
+                    trips = 1
+                    stats.unknown_trip_counts += 1
+                visit(body, mult * trips, seen + (comp,))
+                continue
+            cm = _CALL_RE.search(ln)
+            if cm and ("call(" in ln or "fusion(" in ln or
+                       "conditional(" in ln):
+                visit(cm.group(1), mult, seen + (comp,))
+
+    if entry:
+        visit(entry, 1.0)
+    else:   # fallback: flat scan
+        for ln in hlo.splitlines():
+            m = _OP_RE.search(ln)
+            if m:
+                stats.bytes_by_kind[m.group(2)] += _shape_bytes(m.group(1))
+                stats.count_by_kind[m.group(2)] += 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    device_flops: float
+    device_bytes: float
+    collective_bytes: float
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None
+    per_device_hbm_bytes: Optional[float] = None
+    unknown_trip_counts: int = 0
+    xla_flops: float = 0.0          # raw cost_analysis (scan bodies x1)
+    xla_bytes: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, *, model_flops: Optional[float] = None,
+                           peak_flops: float = PEAK_FLOPS_BF16,
+                           hbm_bw: float = HBM_BW,
+                           ici_bw: float = ICI_BW) -> Roofline:
+    """Three-term roofline from the while-aware HLO cost parser
+    (launch.hlo_cost); XLA's own cost_analysis() under-counts scan bodies
+    and is kept only as a cross-check in xla_flops/xla_bytes."""
+    from repro.launch.hlo_cost import parse_program_costs
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    pc = parse_program_costs(hlo)
+    flops = pc.flops
+    byts = pc.bytes
+    colls = CollectiveStats(bytes_by_kind=dict(pc.collective_by_kind),
+                            count_by_kind=dict(pc.collective_counts),
+                            unknown_trip_counts=pc.unknown_trip_counts)
+    ma = compiled.memory_analysis()
+    hbm = None
+    if ma is not None:
+        hbm = (ma.argument_size_in_bytes + ma.output_size_in_bytes +
+               ma.temp_size_in_bytes)
+    compute_s = flops / peak_flops
+    memory_s = byts / hbm_bw
+    collective_s = colls.total_bytes / ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    ratio = None
+    if model_flops and flops > 0:
+        ratio = model_flops / flops
+    return Roofline(
+        device_flops=flops, device_bytes=byts,
+        collective_bytes=colls.total_bytes,
+        collective_counts=colls.count_by_kind,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_flops_ratio=ratio, per_device_hbm_bytes=hbm,
+        unknown_trip_counts=colls.unknown_trip_counts,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)))
+
+
+# ---------------------------------------------------------------------------
+def model_flops_estimate(cfg, shape, n_devices: int) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) per device, D = tokens processed.
+
+    Training multiplies by 1 (the 6 already counts fwd+bwd: 2 fwd + 4 bwd);
+    decode counts one token per sequence.
+    """
+    n_params, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    tokens = shape.global_batch            # one step
+    return 2.0 * n_active * tokens / n_devices
+
+
+def param_counts(cfg) -> Tuple[float, float]:
+    """(total, active) parameter counts from the config."""
+    d, ff, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.hd
+    counts = {"attn": d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2),
+              "rec": 0.0, "mlstm": 0.0, "slstm": 0.0}
+    w = cfg.lru_width or d
+    counts["rec"] = 3 * d * w + 2 * w * w + cfg.conv_width * w
+    counts["mlstm"] = 4 * d * (cfg.n_heads * hd) + 2 * d * cfg.n_heads + \
+        3 * d * d
+    counts["slstm"] = 8 * d * d + d * d
+    if cfg.ffn_kind in ("swiglu", "geglu"):
+        ffn_total = ffn_active = 3 * d * ff
+    elif cfg.ffn_kind == "gelu":
+        ffn_total = ffn_active = 2 * d * ff
+    elif cfg.ffn_kind == "moe":
+        ffn_total = cfg.moe.num_experts * 3 * d * ff + d * cfg.moe.num_experts
+        ffn_active = cfg.moe.top_k * 3 * d * ff + d * cfg.moe.num_experts
+    else:
+        ffn_total = ffn_active = 0.0
+
+    layers = list(cfg.unit) * cfg.resolved_n_units + list(cfg.tail)
+    total = active = 0.0
+    for kind in layers:
+        total += counts[kind]
+        active += counts[kind]
+        if kind in ("attn", "rec"):
+            total += ffn_total
+            active += ffn_active
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+    total += emb
+    active += emb
+    if cfg.is_encoder_decoder:
+        enc = cfg.n_encoder_layers * (counts["attn"] + 2 * d * ff)
+        cross = cfg.n_layers * counts["attn"]
+        total += enc + cross
+        active += enc + cross
+    return total, active

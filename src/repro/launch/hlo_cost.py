@@ -1,0 +1,296 @@
+"""While-aware HLO cost model parsed from compiled.as_text().
+
+XLA's ``compiled.cost_analysis()`` counts a `while` body ONCE, so scanned
+models (scan-over-layers, chunked attention, microbatching) under-report
+FLOPs and bytes by the trip count.  This module re-derives:
+
+  * FLOPs — from `dot` ops (2 * prod(out_dims) * prod(contracting_dims)),
+    which dominate transformer compute; found in top-level computations AND
+    inside fusion sub-computations;
+  * bytes — operand + output bytes at FUSION BOUNDARIES (top-level ops
+    only: fusion/dot/copy/collective/custom-call/dynamic-slice...), the
+    HBM-traffic proxy XLA's own memory model uses;
+  * collective bytes — by kind;
+
+all scaled by while-loop trip counts recovered from the canonical
+counted-loop condition (`compare(iv, constant(N))`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+# first lowercase-word token followed by '(' after the shape is the op kind;
+# tuple shapes may contain '/*index=N*/' comments and layouts may contain
+# 'T(8,128)' tiles (uppercase, excluded)
+_KIND_RE = re.compile(r"\s([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+# top-level ops whose boundary bytes count as traffic
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "add-dependency", "partition-id", "replica-id", "iota",
+             "opt-barrier"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    """Dims of the first (only) array shape in the string."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    kind: str
+    line: str
+    args: str = ""
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    current = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            # column-0 lines: module header, computation headers (possibly
+            # wrapping over several lines), or the closing brace
+            s = line.strip()
+            if s == "}":
+                current = None
+            elif s.startswith(("%", "ENTRY")) and "(" in s:
+                head = s.replace("ENTRY", "").strip()
+                head = head.split("(", 1)[0].strip().lstrip("%")
+                if head:
+                    current = head
+                    comps[current] = []
+            continue
+        if current is None:
+            continue
+        nm = _NAME_RE.match(line)
+        if not nm:
+            continue
+        rest = line[nm.end():]
+        km = _KIND_RE.search(" " + rest)
+        if not km:
+            continue
+        shape = rest[:km.start() - 1].strip()
+        args = rest[km.end() - 1:].split(")", 1)[0]
+        comps[current].append(_Op(nm.group(1), shape, km.group(1),
+                                  line.strip(), args))
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond_ops: List[_Op]) -> Optional[int]:
+    consts = []
+    for op in cond_ops:
+        if "compare" in op.line or "constant" in op.line:
+            consts += [int(c) for c in _CONST_RE.findall(op.line)]
+    return max(consts) if consts else None
+
+
+def _dot_flops(op: _Op, symtab: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.shape)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # contracting dims from the lhs operand's shape
+    cm = _LHS_C.search(op.line)
+    if not cm:
+        return 2.0 * out_n          # degenerate
+    # first operand = lhs
+    ops = _OPERAND_RE.findall(op.args)
+    k = 1
+    if ops:
+        lhs_shape = symtab.get(ops[0], "")
+        lhs_dims = _shape_dims(lhs_shape)
+        for idx in (int(i) for i in cm.group(1).split(",") if i):
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    return 2.0 * out_n * k
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    unknown_trip_counts: int = 0
+    n_while_loops: int = 0
+
+
+def _sliced_params(comps, callee) -> Dict[int, int]:
+    """Parameter indices of ``callee`` that are only read through a
+    (dynamic-)slice inside the fused computation, mapped to the slice's
+    output bytes — those operands contribute slice-sized traffic, not their
+    full (e.g. whole stacked-cache-carry) size."""
+    ops = comps.get(callee)
+    if not ops:
+        return {}
+    # param name -> index; include single-level bitcast/reshape aliases
+    param_idx: Dict[str, int] = {}
+    for op in ops:
+        if op.kind == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    alias = dict(param_idx)
+    for op in ops:
+        if op.kind in ("bitcast", "reshape", "copy"):
+            srcs = _OPERAND_RE.findall(op.args)
+            if srcs and srcs[0] in alias:
+                alias[op.name] = alias[srcs[0]]
+    sliced: Dict[int, int] = {}
+    direct_use: Dict[int, bool] = {}
+    for op in ops:
+        refs = [alias[o] for o in _OPERAND_RE.findall(op.args)
+                if o in alias]
+        if op.kind in ("dynamic-slice", "slice"):
+            for idx in refs:
+                b = _shape_bytes(op.shape)
+                sliced[idx] = max(sliced.get(idx, 0), b)
+        elif op.kind not in ("bitcast", "reshape", "copy", "parameter"):
+            for idx in refs:
+                direct_use[idx] = True
+    # a param consumed anywhere else at full size is NOT capped
+    return {i: b for i, b in sliced.items() if not direct_use.get(i)}
+
+
+def parse_program_costs(hlo: str) -> ProgramCost:
+    comps = _parse_computations(hlo)
+    entry = _entry_name(hlo)
+    cost = ProgramCost()
+    symtabs: Dict[str, Dict[str, str]] = {
+        c: {op.name: op.shape for op in ops} for c, ops in comps.items()}
+
+    def visit(comp: str, mult: float, count_bytes: bool,
+              stack: Tuple[str, ...] = ()):
+        if comp not in comps or comp in stack:
+            return
+        symtab = symtabs[comp]
+        for op in comps[comp]:
+            kind = op.kind
+            # -- control flow ------------------------------------------------
+            if kind == "while":
+                wm = _WHILE_ATTRS.search(op.line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trips = _trip_count(comps.get(cond, []))
+                    if trips is None:
+                        trips = 1
+                        cost.unknown_trip_counts += 1
+                    cost.n_while_loops += 1
+                    visit(body, mult * trips, count_bytes, stack + (comp,))
+                continue
+            if kind in ("call", "conditional"):
+                for callee in _CALLS_RE.findall(op.line):
+                    visit(callee, mult, count_bytes, stack + (comp,))
+                continue
+            if kind == "fusion":
+                cm = _CALLS_RE.search(op.line)
+                if cm:
+                    # flops inside fusions count; bytes only at the boundary
+                    visit(cm.group(1), mult, False, stack + (comp,))
+            # -- flops ----------------------------------------------------------
+            if kind == "dot":
+                cost.flops += _dot_flops(op, symtab) * mult
+            # -- collectives ------------------------------------------------------
+            base_kind = kind[:-6] if kind.endswith("-start") else kind
+            if base_kind in _COLLECTIVES:
+                b = _shape_bytes(op.shape)
+                cost.collective_by_kind[base_kind] += b * mult
+                cost.collective_counts[base_kind] += 1
+                cost.collective_bytes += b * mult
+            # -- boundary bytes ---------------------------------------------------
+            if count_bytes and kind not in _FREE_OPS and \
+                    not kind.endswith("-done"):
+                if kind == "dynamic-update-slice":
+                    # XLA updates the buffer in place (aliased); traffic is
+                    # the update region read + written, not the whole buffer
+                    operands = _OPERAND_RE.findall(op.args)
+                    upd = symtab.get(operands[1], "") if len(operands) > 1 \
+                        else ""
+                    cost.bytes += 2.0 * _shape_bytes(upd) * mult
+                    continue
+                out_b = _shape_bytes(op.shape)
+                if kind in ("dynamic-slice", "slice", "gather"):
+                    # reads only the selected region ~= output bytes
+                    cost.bytes += 2.0 * out_b * mult
+                    continue
+                operands = _OPERAND_RE.findall(op.args)
+                if kind == "fusion":
+                    cm = _CALLS_RE.search(op.line)
+                    callee = cm.group(1) if cm else None
+                    if "update-slice" in op.name:
+                        # fused in-place DUS: the aliased buffer (and any
+                        # dtype-normalization echoes of it that the CPU
+                        # backend materializes) is not traffic; the real
+                        # cost is the update region read + written.  The
+                        # update is the largest operand clearly smaller
+                        # than the buffer.
+                        sizes = [_shape_bytes(symtab.get(o, ""))
+                                 for o in operands]
+                        small = [s for s in sizes if s < out_b / 2]
+                        if small:
+                            cost.bytes += 2.0 * max(small) * mult
+                        continue
+                    operand_b = 0
+                    sliced = _sliced_params(comps, callee) \
+                        if callee else {}
+                    for i, operand in enumerate(operands):
+                        ob = _shape_bytes(symtab.get(operand, ""))
+                        if i in sliced:
+                            ob = min(ob, 2 * sliced[i])
+                        operand_b += ob
+                    cost.bytes += (out_b + operand_b) * mult
+                    continue
+                operand_b = sum(_shape_bytes(symtab.get(o, ""))
+                                for o in operands)
+                cost.bytes += (out_b + operand_b) * mult
+
+    if entry:
+        visit(entry, 1.0, True)
+    return cost

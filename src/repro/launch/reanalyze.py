@@ -1,0 +1,32 @@
+"""Re-run the HLO cost parser over dumped .hlo.gz artifacts (no recompile).
+
+Usage: PYTHONPATH=src python -m repro.launch.reanalyze [pattern]
+Prints the refreshed roofline terms per dump.
+"""
+import gzip
+import sys
+from pathlib import Path
+
+from repro.core.mx_types import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+from repro.launch.hlo_cost import parse_program_costs
+
+HLO_DIR = Path(__file__).resolve().parents[3] / "experiments" / "hlo"
+
+
+def main():
+    pattern = sys.argv[1] if len(sys.argv) > 1 else "*"
+    for f in sorted(HLO_DIR.glob(f"{pattern}.hlo.gz")):
+        txt = gzip.open(f, "rt").read()
+        c = parse_program_costs(txt)
+        comp = c.flops / PEAK_FLOPS_BF16
+        mem = c.bytes / HBM_BW
+        coll = c.collective_bytes / ICI_BW
+        terms = {"compute": comp, "memory": mem, "collective": coll}
+        bound = max(terms, key=terms.get)
+        print(f"{f.name[:-7]}: compute={comp*1e3:.3f}ms "
+              f"memory={mem*1e3:.3f}ms collective={coll*1e3:.3f}ms "
+              f"bound={bound} unknown_trips={c.unknown_trip_counts}")
+
+
+if __name__ == "__main__":
+    main()

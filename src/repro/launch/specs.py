@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Weak-type-correct, shardable, zero-allocation stand-ins for:
+  train  — {'tokens': (B, S) i32} (+ vision_embeds / frames for stub
+           frontends)
+  prefill— same token layout at the prefill batch/seq
+  decode — {'tokens': (B, 1) i32} + the KV/recurrent cache tree at S
+
+plus the logical sharding axes of each input.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import ModelConfig, ShapeConfig
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                kind: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (specs, logical_axes) for the step input batch."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        axes = {"tokens": ("batch", None)}
+        if cfg.vision_tokens:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.vision_dim), cfg.dtype)
+            axes["vision_embeds"] = ("batch", None, None)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   cfg.dtype)
+            axes["frames"] = ("batch", "seq", None)
+        return specs, axes
+    if kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        axes = {"tokens": ("batch", None)}
+        if cfg.vision_tokens:
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.vision_dim), cfg.dtype)
+            axes["vision_embeds"] = ("batch", None, None)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   cfg.dtype)
+            axes["frames"] = ("batch", "seq", None)
+        return specs, axes
+    if kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        axes = {"tokens": ("batch", None)}
+        return specs, axes
+    raise ValueError(kind)
+
+
+def decode_cache_specs(model, shape: ShapeConfig):
+    """Abstract cache tree for a decode cell (cache filled to seq_len)."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    cache = model.cache_init(B, S, abstract=True)
+    if cfg.is_encoder_decoder:
+        # enc-dec decode also carries the cross K/V from an S-frame prompt
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        kv = jax.ShapeDtypeStruct((cfg.n_layers, B, S, kvh, hd), cfg.dtype)
+        cache = dict(cache)
+        cache["enc_kv"] = (kv, kv)
+    return cache
+
+
+def decode_cache_axes(model):
+    cfg = model.cfg
+    if cfg.is_encoder_decoder:
+        ca = ("layers", "batch", "kv_seq", "kv_heads", None)
+        from repro.models.attention import CACHE_AXES
+        self_axes = jax.tree_util.tree_map(
+            lambda a: ("layers",) + tuple(a),
+            {"k": CACHE_AXES, "v": CACHE_AXES},
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                y is None or isinstance(y, str) for y in x))
+        return {"self": self_axes, "index": (), "enc_kv": (ca, ca)}
+    return model.cache_axes()

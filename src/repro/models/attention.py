@@ -1,0 +1,321 @@
+"""Attention for every arch: GQA/MQA, RoPE, qk-norm, sliding window, caches.
+
+Three execution paths, all numerically consistent:
+
+  * direct   — masked softmax on the full score matrix; used for short
+               sequences and for the MXInt softmax 'sim' datapath (the
+               paper's ViT path computes whole rows, like the FPGA design).
+  * chunked  — lax.scan online-softmax over KV chunks (flash-attention
+               algebra in pure XLA); used whenever the score matrix would
+               not fit (32k prefill, 4k training).  This is what the
+               multi-pod dry-run lowers.
+  * kernel   — the Pallas flash kernel (repro.kernels) on real TPU backends.
+
+KV caches:
+  full ring: (b, kv_heads, S_max, hd) with dynamic_update_slice writes.
+  sliding window: ring buffer of size W; slot i at step t holds absolute
+  position t - ((t - i) mod W) — no position side-array needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mx_types import QuantConfig
+from repro.models import layers as L
+from repro.models.model_api import ModelConfig, Param, dense_init, ones_init
+
+_NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def init_attn_params(key, cfg: ModelConfig, dtype, cross: bool = False):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd),
+                         ("embed", "q_heads"), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd),
+                         ("embed", "kv_heads"), dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd),
+                         ("embed", "kv_heads"), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model),
+                         ("q_heads", "embed"), dtype=dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ones_init((hd,), (None,), dtype=dtype)
+        p["k_norm"] = ones_init((hd,), (None,), dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# score/softmax cores
+# ---------------------------------------------------------------------------
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _gqa_scores(q, k, scale):
+    """q: (b, s, kv, g, hd); k: (b, S, kv, hd) -> (b, kv, g, s, S)."""
+    return jnp.einsum("bskgd,bSkd->bkgsS", q, k) * scale
+
+
+def _direct_attention(q, k, v, mask, quant: QuantConfig, scale):
+    s = _gqa_scores(q, k, scale)
+    s = jnp.where(mask, s.astype(jnp.float32), _NEG_INF)
+    p = L.softmax(s, quant, axis=-1).astype(q.dtype)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bkgsS,bSkd->bskgd", p, v)
+
+
+def _q_chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale):
+    """Attention chunked over QUERY blocks (lax.scan, no carry).
+
+    For long prefill the kv-chunked online-softmax form drags a
+    (b, heads, s, hd) f32 accumulator through every scan iteration — at 32k
+    that carry alone is GBs of HBM round-trips per chunk (§Perf iteration
+    log, llama3 prefill).  Query blocks are independent: each block does one
+    full-width softmax, there is no carry, and the score tensor crosses
+    fusion boundaries in bf16 (the f32 accumulation lives inside the dot).
+    On real TPU the Pallas flash kernel keeps scores in VMEM entirely; this
+    is the XLA-path equivalent structure.
+    """
+    b, s, kv, g, hd = q.shape
+    S = k.shape[1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nq = s // chunk
+    # fold the softmax scale into q (one fused pass instead of a full-score
+    # rescale) and pre-transpose K/V ONCE to the dot layouts — leaving them
+    # (b, S, kv, hd) made XLA re-copy them inside every q-block iteration
+    # (§Perf: llama3 prefill, copy_bitcast_fusion ~1TB).
+    qs = (q * scale).astype(q.dtype)
+    qc = jnp.swapaxes(qs.reshape(b, nq, chunk, kv, g, hd), 0, 1)
+    kt = jnp.einsum("bSkd->bkdS", k)
+    vt = jnp.einsum("bSkd->bkSd", v)
+    k_pos = jnp.arange(S)
+    neg = jnp.asarray(jnp.finfo(q.dtype).min, q.dtype)
+
+    def block(_, inp):
+        qi, qb = inp
+        # f32 accumulation inside the dot; scores cross the fusion boundary
+        # in the model dtype (halves every downstream score pass)
+        s_blk = jnp.einsum("bckgd,bkdS->bkgcS", qb, kt,
+                           preferred_element_type=jnp.float32
+                           ).astype(q.dtype)
+        q_pos = q_offset + qi * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, S), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s_blk = jnp.where(mask[None, None, None], s_blk, neg)
+        m = jnp.max(s_blk, axis=-1, keepdims=True)
+        # exp(neg - m) == 0 and every query row sees at least itself, so no
+        # second masking pass is needed
+        p = jnp.exp((s_blk - m).astype(jnp.float32))
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        pb = (p / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        o = jnp.einsum("bkgcS,bkSd->bckgd", pb, vt,
+                       preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(block, None, (jnp.arange(nq), qc))
+    return jnp.swapaxes(outs, 0, 1).reshape(b, s, kv, g, hd)
+
+
+def _chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale):
+    """Online-softmax over KV chunks via lax.scan; O(s*chunk) live memory.
+
+    RETAINED FOR COMPARISON ONLY: superseded by _q_chunked_attention after
+    the §Perf llama3-prefill iteration showed the (m, l, acc) scan carry
+    costs GBs of HBM round-trips per chunk (EXPERIMENTS.md §4, cell C).
+    Still the right shape when queries are few and keys huge AND a carry is
+    acceptable (e.g. speculative scoring); kept tested via kernels/ref.
+    """
+    b, s, kv, g, hd = q.shape
+    S = k.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    kc = jnp.swapaxes(k.reshape(b, n_chunks, chunk, kv, hd), 0, 1)
+    vc = jnp.swapaxes(v.reshape(b, n_chunks, chunk, kv, hd), 0, 1)
+
+    q_pos = q_offset + jnp.arange(s)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, kb, vb = inputs
+        s_blk = _gqa_scores(qf, kb.astype(jnp.float32), scale)  # (b,kv,g,s,c)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((s, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s_blk = jnp.where(mask[None, None, None], s_blk, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_blk, -1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s_blk - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l_new = l * alpha + jnp.sum(p, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, s), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.einsum("bkgsd->bskgd", out).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cache helpers
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                  dtype) -> Dict[str, jnp.ndarray]:
+    W = min(max_len, window) if window > 0 else max_len
+    shape = (batch, W, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                   dtype):
+    W = min(max_len, window) if window > 0 else max_len
+    shape = (batch, W, cfg.n_kv_heads, cfg.hd)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+CACHE_AXES = ("batch", "kv_seq", "kv_heads", None)
+CACHE_AXES_TREE = {"k": CACHE_AXES, "v": CACHE_AXES}
+
+
+# ---------------------------------------------------------------------------
+# main entry
+# ---------------------------------------------------------------------------
+def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
+              quant: QuantConfig,
+              positions: Optional[jnp.ndarray] = None,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              window: int = 0,
+              causal: bool = True,
+              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              use_rope: bool = True,
+              chunk: int = 1024):
+    """Returns (output (b, s, d), updated cache or None).
+
+    Modes:
+      cache=None                      -> training / encoder (no state)
+      cache given, s > 1              -> prefill (writes 0..s)
+      cache given, s == 1             -> decode at cache_index
+      kv_override                     -> cross attention (encoder K/V)
+    """
+    b, s, _ = x.shape
+    hd = cfg.hd
+    kvh = cfg.n_kv_heads
+    g = cfg.n_heads // kvh
+    scale = hd ** -0.5
+
+    q = _split_heads(L.linear(x, p["wq"], q=quant), cfg.n_heads, hd)
+    if kv_override is None:
+        k = _split_heads(L.linear(x, p["wk"], q=quant), kvh, hd)
+        v = _split_heads(L.linear(x, p["wv"], q=quant), kvh, hd)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm and "q_norm" in p:
+        q = L.rmsnorm(q, p["q_norm"], q=quant, eps=cfg.norm_eps)
+        if kv_override is None:
+            k = L.rmsnorm(k, p["k_norm"], q=quant, eps=cfg.norm_eps)
+
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = base + jnp.arange(s)[None, :]        # (1, s)
+    if use_rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        if kv_override is None:
+            k = L.rope(k, positions, cfg.rope_theta)
+
+    q = q.reshape(b, s, kvh, g, hd)
+    new_cache = None
+
+    if cache is not None and kv_override is None:
+        W = cache["k"].shape[1]
+        if s == 1:
+            slot = (cache_index % W) if window > 0 else cache_index
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            # absolute position of every slot
+            idx = jnp.arange(W)
+            if window > 0:
+                t = cache_index
+                slot_pos = t - jnp.mod(t - idx, W)
+            else:
+                slot_pos = idx
+            valid = (slot_pos >= 0) & (slot_pos <= cache_index)
+            if window > 0:
+                valid &= (cache_index - slot_pos) < window
+            mask = valid[None, None, None, None, :]      # (1,1,1,1,W)
+            sc = _gqa_scores(q, ck.astype(q.dtype), scale)
+            sc = jnp.where(mask, sc.astype(jnp.float32), _NEG_INF)
+            pr = L.softmax(sc, quant, axis=-1).astype(q.dtype)
+            pr = jnp.where(mask, pr, 0.0)
+            o = jnp.einsum("bkgsS,bSkd->bskgd", pr, cv.astype(q.dtype))
+        elif window > 0 and s >= W:
+            # SWA prefill longer than the ring: only the last W positions
+            # survive; they land on slots (pos % W) — a permutation scatter.
+            pos = jnp.arange(s - W, s)
+            slots = jnp.mod(pos, W)
+            ck = cache["k"].at[:, slots].set(
+                k[:, -W:].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slots].set(
+                v[:, -W:].astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
+                                     window=window, chunk=chunk, scale=scale)
+        else:
+            # prefill fits the cache: write slots [0, s)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+            o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
+                                     window=window, chunk=chunk, scale=scale)
+    else:
+        kv_len = k.shape[1]
+        use_direct = (quant.enabled and quant.quantize_nonlinear and
+                      quant.mode in ("sim", "packed")) or \
+                     (s * kv_len <= 512 * 512)
+        if use_direct:
+            q_pos = positions.reshape(-1)[-s:]
+            k_pos = jnp.arange(kv_len)
+            mask = jnp.ones((s, kv_len), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window > 0:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            o = _direct_attention(q, k, v, mask[None, None, None], quant,
+                                  scale)
+        else:
+            o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
+                                     window=window, chunk=chunk, scale=scale)
+
+    o = o.reshape(b, s, cfg.n_heads * hd)
+    out = L.linear(o, p["wo"], q=quant)
+    return out, new_cache

@@ -1,0 +1,206 @@
+"""Quantization-aware layer primitives shared by every architecture.
+
+Each primitive dispatches on QuantConfig.mode:
+
+  'off'    — plain float ops.
+  'fake'   — MXInt quantize-dequantize (straight-through grads) on weights
+             and (optionally) activations; float non-linear ops unless
+             quantize_nonlinear is set.
+  'sim'    — bit-accurate MXInt datapaths from repro.core.nonlinear for
+             LayerNorm/softmax/GELU-family; linears run QDQ (exactly equal
+             to the integer datapath: products of <=8-bit mantissas are
+             exact in f32, and the TPU accumulator is lossless).
+  'packed' — weights arrive as MXTensor leaves (int8 planes); dequant is
+             fused into the consuming op.  Serving path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mx_types import QuantConfig, NonlinearConfig
+from repro.core.quantize import MXTensor, dequantize, fake_quant
+from repro.core import nonlinear as nl
+from repro.models.model_api import Param
+
+
+# ---------------------------------------------------------------------------
+# sharding hint (no-op off-mesh; constraint under pjit)
+# ---------------------------------------------------------------------------
+def shard_hint(x: jnp.ndarray, spec) -> jnp.ndarray:
+    """Apply a with_sharding_constraint if a mesh is active."""
+    from repro.parallel.sharding import maybe_constraint
+    return maybe_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+def _maybe_qdq_weight(w: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
+    if q.mode in ("fake", "sim"):
+        if q.emulate == "int":
+            from repro.core.quantize import per_tensor_int_qdq
+            return per_tensor_int_qdq(w, q.weight_fmt.mant_bits)
+        if q.emulate == "fp8":
+            from repro.core.quantize import fp8_e4m3_qdq
+            return fp8_e4m3_qdq(w)
+        return fake_quant(w, q.weight_fmt.mant_bits,
+                          q.weight_fmt.block_size, 0)
+    return w
+
+
+def _maybe_qdq_act(x: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
+    if q.mode in ("fake", "sim"):
+        if q.emulate == "int":
+            from repro.core.quantize import per_tensor_int_qdq
+            return per_tensor_int_qdq(x, q.act_fmt.mant_bits)
+        if q.emulate == "fp8":
+            from repro.core.quantize import fp8_e4m3_qdq
+            return fp8_e4m3_qdq(x)
+        return fake_quant(x, q.act_fmt.mant_bits, q.act_fmt.block_size, -1)
+    return x
+
+
+def linear(x: jnp.ndarray, w: Param, b: Optional[Param] = None, *,
+           q: QuantConfig) -> jnp.ndarray:
+    """y = x @ w (+ b); w may be a packed MXTensor in serving mode."""
+    wv = w.value
+    if isinstance(wv, MXTensor):
+        wf = dequantize(wv, dtype=x.dtype)          # fused by XLA into the dot
+    else:
+        wf = _maybe_qdq_weight(wv, q).astype(x.dtype)
+    xf = _maybe_qdq_act(x, q)
+    y = jnp.einsum("...k,kn->...n", xf, wf)
+    if b is not None:
+        y = y + b.value.astype(y.dtype)
+    return y
+
+
+def embed_lookup(tokens: jnp.ndarray, table: Param, q: QuantConfig,
+                 dtype) -> jnp.ndarray:
+    tv = table.value
+    if isinstance(tv, MXTensor):
+        tf = dequantize(tv, dtype=dtype)
+    else:
+        tf = _maybe_qdq_weight(tv, q).astype(dtype)
+    return jnp.take(tf, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table: Param, q: QuantConfig) -> jnp.ndarray:
+    tv = table.value
+    if isinstance(tv, MXTensor):
+        tf = dequantize(tv, dtype=x.dtype)
+    else:
+        tf = _maybe_qdq_weight(tv, q).astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, tf)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def _nl_on(q: QuantConfig, op: str) -> bool:
+    return (q.enabled and q.quantize_nonlinear and
+            q.mode in ("sim", "packed") and op in q.nl_ops)
+
+
+def _nl_emulate(q: QuantConfig, op: str):
+    return q.nl_emulate if _nl_on(q, op) else None
+
+
+def rmsnorm(x: jnp.ndarray, gamma: Param, *, q: QuantConfig,
+            eps: float = 1e-6) -> jnp.ndarray:
+    if _nl_emulate(q, "layernorm") == "fixedpoint":
+        # 8-bit fixed-point RMS variant of the [9]/SDA integer datapath
+        from repro.core.nonlinear import _fixed_point_qdq
+        xf = _fixed_point_qdq(x.astype(jnp.float32), 8)
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (_fixed_point_qdq(y, 8) * gamma.value).astype(x.dtype)
+    if _nl_on(q, "layernorm"):
+        y = nl.layernorm_value(x.astype(jnp.float32), gamma.value, None,
+                               q.nonlinear, q.act_fmt, rms_only=True)
+        return y.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * gamma.value).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, gamma: Param, beta: Param, *, q: QuantConfig,
+              eps: float = 1e-6) -> jnp.ndarray:
+    if _nl_emulate(q, "layernorm") == "fixedpoint":
+        y = nl.fixedpoint_layernorm(x.astype(jnp.float32), gamma.value,
+                                    beta.value, bits=8, eps=eps)
+        return y.astype(x.dtype)
+    if _nl_on(q, "layernorm"):
+        y = nl.layernorm_value(x.astype(jnp.float32), gamma.value, beta.value,
+                               q.nonlinear, q.act_fmt)
+        return y.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.value + beta.value).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / softmax
+# ---------------------------------------------------------------------------
+def act_fn(x: jnp.ndarray, kind: str, q: QuantConfig) -> jnp.ndarray:
+    em = _nl_emulate(q, "gelu")
+    if em == "fixedpoint":
+        return nl.fixedpoint_gelu(x.astype(jnp.float32)).astype(x.dtype)
+    if em == "relu6":
+        return nl.relu6_gelu(x.astype(jnp.float32)).astype(x.dtype)
+    if _nl_on(q, "gelu"):
+        cfg: NonlinearConfig = q.nonlinear
+        f = {"gelu": nl.gelu_value, "silu": nl.silu_value}[kind]
+        return f(x.astype(jnp.float32), cfg, q.act_fmt).astype(x.dtype)
+    return {"gelu": lambda v: jax.nn.gelu(v, approximate=False),
+            "silu": jax.nn.silu}[kind](x)
+
+
+def softmax(x: jnp.ndarray, q: QuantConfig, axis: int = -1) -> jnp.ndarray:
+    if _nl_emulate(q, "softmax") in ("fixedpoint", "relu6"):
+        return nl.fixedpoint_softmax(x.astype(jnp.float32),
+                                     axis=axis).astype(x.dtype)
+    if _nl_on(q, "softmax"):
+        y = nl.softmax_value(x.astype(jnp.float32), q.nonlinear, q.act_fmt,
+                             axis=axis)
+        return y.astype(x.dtype)
+    return jax.nn.softmax(x, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, hd); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) *
+                    (jnp.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., s, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (...,s,1,half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def ffn(x: jnp.ndarray, p, kind: str, q: QuantConfig) -> jnp.ndarray:
+    """p: dict with wi/wg/wo (gated) or wi/wo (plain)."""
+    if kind in ("swiglu", "geglu"):
+        act = "silu" if kind == "swiglu" else "gelu"
+        up = linear(x, p["wi"], q=q)
+        gate = act_fn(linear(x, p["wg"], q=q), act, q)
+        return linear(up * gate, p["wo"], q=q)
+    elif kind == "gelu":
+        h = act_fn(linear(x, p["wi"], p.get("bi"), q=q), "gelu", q)
+        return linear(h, p["wo"], p.get("bo"), q=q)
+    elif kind == "none":
+        return jnp.zeros_like(x)
+    raise ValueError(kind)

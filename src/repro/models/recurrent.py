@@ -1,0 +1,361 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma) and mLSTM/sLSTM (xLSTM).
+
+All three are sub-quadratic — they carry O(1)-per-token state, which is why
+the long_500k shape runs for these families (DESIGN.md §6).
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(c * softplus(Lambda) * (-r_t))        # 'a' in (0,1), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  Training uses jax.lax.associative_scan on the linear recurrence (parallel,
+  O(log T) depth); decode is the one-step update.  The block wraps the LRU
+  with linear_x -> temporal conv(4) -> LRU, gated by GELU(linear_y), then
+  linear_out — the RecurrentGemma recurrent block.
+
+mLSTM (arXiv:2405.04517), chunkwise-parallel form:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (C_t q_t) / max(|n_t . q_t|, 1)
+  with scalar-per-head gates.  Implemented as gated linear attention over
+  chunks: the carry (C, n) crosses chunk boundaries, intra-chunk terms are
+  a masked quadratic within the chunk only -> O(T * chunk) work.  The
+  exponential input gate runs through the paper's pow2-LUT datapath when
+  quantize_nonlinear is on (the MXInt exp — DESIGN.md §6 'xlstm' row).
+
+sLSTM: scalar memory, inherently sequential -> lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mx_types import QuantConfig
+from repro.models import layers as L
+from repro.models.model_api import ModelConfig, Param, dense_init, zeros_init
+
+_C_RGLRU = 8.0
+
+
+# ===========================================================================
+# RG-LRU
+# ===========================================================================
+def init_rglru_params(key, cfg: ModelConfig, dtype) -> Dict[str, Param]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "linear_y": dense_init(ks[0], (d, w), ("embed", "lru"), dtype=dtype),
+        "linear_x": dense_init(ks[1], (d, w), ("embed", "lru"), dtype=dtype),
+        "linear_out": dense_init(ks[2], (w, d), ("lru", "embed"), dtype=dtype),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), ("conv", "lru"),
+                             scale=0.5, dtype=dtype),
+        "conv_b": zeros_init((w,), ("lru",), dtype=dtype),
+        "w_a": dense_init(ks[4], (w, w), ("lru", None), dtype=dtype),
+        "w_i": dense_init(ks[5], (w, w), ("lru", None), dtype=dtype),
+        "lam": Param(jnp.linspace(0.3, 1.7, w).astype(dtype), ("lru",)),
+    }
+
+
+def _rglru_gates(p, x, quant):
+    r = jax.nn.sigmoid(L.linear(x, p["w_a"], q=quant).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(x, p["w_i"], q=quant).astype(jnp.float32))
+    log_a = -_C_RGLRU * jax.nn.softplus(
+        p["lam"].value.astype(jnp.float32)) * r     # log a_t <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * (i * x.astype(jnp.float32))
+
+
+def rglru_scan(p, x: jnp.ndarray, quant: QuantConfig,
+               h0: Optional[jnp.ndarray] = None):
+    """x: (b, s, w). Parallel associative scan over the linear recurrence."""
+    a, b_in = _rglru_gates(p, x, quant)               # (b, s, w) each
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b_in = b_in.at[:, 0].add(a[:, 0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]              # outputs, final state
+
+
+def rglru_step(p, x: jnp.ndarray, h: jnp.ndarray, quant: QuantConfig):
+    """x: (b, 1, w); h: (b, w)."""
+    a, b_in = _rglru_gates(p, x, quant)
+    h_new = a[:, 0] * h + b_in[:, 0]
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+def _temporal_conv(p, x: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv width K.  state: (b, K-1, w) history."""
+    K = p["conv_w"].value.shape[0]
+    w = p["conv_w"].value.astype(jnp.float32)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1).astype(jnp.float32)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):].astype(x.dtype) if K > 1 else None
+    return (out + p["conv_b"].value.astype(jnp.float32)).astype(x.dtype), \
+        new_state
+
+
+def rglru_block(p, x: jnp.ndarray, cfg: ModelConfig, *, quant: QuantConfig,
+                state: Optional[Dict[str, jnp.ndarray]] = None,
+                decode: bool = False):
+    """RecurrentGemma recurrent block.  state: {'conv': (b,K-1,w),
+    'h': (b,w)} or None."""
+    y = L.act_fn(L.linear(x, p["linear_y"], q=quant), "gelu", quant)
+    u = L.linear(x, p["linear_x"], q=quant)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _temporal_conv(p, u, conv_state)
+    if decode:
+        out, h_new = rglru_step(p, u, state["h"], quant)
+    else:
+        h0 = state["h"] if state is not None else None
+        out, h_new = rglru_scan(p, u, quant, h0)
+    o = L.linear(out * y, p["linear_out"], q=quant)
+    new_state = {"conv": new_conv, "h": h_new.astype(x.dtype)}
+    return o, new_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+            "h": jnp.zeros((batch, w), dtype)}
+
+
+def rglru_state_specs(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w),
+                                         dtype),
+            "h": jax.ShapeDtypeStruct((batch, w), dtype)}
+
+
+RGLRU_STATE_AXES = {"conv": ("batch", None, "lru"), "h": ("batch", "lru")}
+
+
+# ===========================================================================
+# mLSTM (chunkwise gated linear attention form)
+# ===========================================================================
+def init_mlstm_params(key, cfg: ModelConfig, dtype) -> Dict[str, Param]:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    proj = H * hd
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": dense_init(ks[0], (d, proj), ("embed", "q_heads"), dtype=dtype),
+        "wk": dense_init(ks[1], (d, proj), ("embed", "q_heads"), dtype=dtype),
+        "wv": dense_init(ks[2], (d, proj), ("embed", "q_heads"), dtype=dtype),
+        "wo": dense_init(ks[3], (proj, d), ("q_heads", "embed"), dtype=dtype),
+        "w_f": dense_init(ks[4], (d, H), ("embed", "heads"), dtype=dtype),
+        "b_f": Param(jnp.full((H,), 3.0, dtype), ("heads",)),
+        "w_i": dense_init(ks[5], (d, H), ("embed", "heads"), dtype=dtype),
+        "up": dense_init(ks[6], (d, 2 * d), ("embed", "mlp"), dtype=dtype),
+        "down": dense_init(ks[7], (d, d), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _mlstm_gates(p, x, quant):
+    """Scalar-per-head gates; exp input gate through the MXInt pow2 datapath
+    when the quant config routes non-linearities through the paper's LUTs."""
+    f_logit = L.linear(x, p["w_f"], q=quant).astype(jnp.float32) + \
+        p["b_f"].value.astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_logit)               # log sigmoid(f) <= 0
+    i_logit = L.linear(x, p["w_i"], q=quant).astype(jnp.float32)
+    log_i = jnp.minimum(i_logit, 0.0)                # stabilized exp gate
+    if quant.enabled and quant.quantize_nonlinear and \
+            quant.mode in ("sim", "packed") and "softmax" in quant.nl_ops:
+        from repro.core.nonlinear import exp_datapath
+        _LOG2E = 1.4426950408889634
+        i_gate = exp_datapath(log_i * _LOG2E, quant.nonlinear.softmax_r_bits)
+    else:
+        i_gate = jnp.exp(log_i)
+    return log_f, i_gate
+
+
+def mlstm_scan(p, x: jnp.ndarray, cfg: ModelConfig, quant: QuantConfig,
+               state: Optional[Tuple] = None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM.  x: (b, s, d) -> (y, (C, n) final)."""
+    b, s, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = L.linear(x, p["wq"], q=quant).reshape(b, s, H, hd) * (hd ** -0.5)
+    k = L.linear(x, p["wk"], q=quant).reshape(b, s, H, hd) * (hd ** -0.5)
+    v = L.linear(x, p["wv"], q=quant).reshape(b, s, H, hd)
+    log_f, i_gate = _mlstm_gates(p, x, quant)        # (b, s, H)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+
+    def to_chunks(t):
+        return jnp.swapaxes(
+            t.reshape(b, n_chunks, chunk, *t.shape[2:]), 0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lfc, igc = to_chunks(log_f), to_chunks(i_gate)
+
+    if state is None:
+        C0 = jnp.zeros((b, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, H, hd), jnp.float32)
+    else:
+        C0, n0 = state
+
+    def step(carry, inp):
+        C, n = carry
+        qb, kb, vb, lf, ig = inp                     # (b,c,H,*) each
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qb, kb, vb))
+        lf_cum = jnp.cumsum(lf, axis=1)              # (b, c, H)
+        # inter-chunk: h_inter_t = (prod f up to t) * C_in q_t
+        decay_q = jnp.exp(lf_cum)                    # (b, c, H)
+        h_inter = jnp.einsum("bchd,bhde->bche", qf * decay_q[..., None], C)
+        n_inter = jnp.einsum("bchd,bhd->bch", qf * decay_q[..., None], n)
+        # intra-chunk: masked quadratic with relative decay
+        rel = lf_cum[:, :, None, :] - lf_cum[:, None, :, :]   # (b,c,c,H) t>=s
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0)
+        w = w * ig[:, None, :, :]                    # input gate at source s
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf)   # q_t . k_s
+        sw = scores * w
+        h_intra = jnp.einsum("btsh,bshe->bthe", sw, vf)
+        n_intra = jnp.sum(sw, axis=2)                    # (n_t . q_t) intra
+        h = h_inter + h_intra
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), 1.0)[..., None]
+        out = h / denom                               # (b, c, H, hd)
+        # carry update
+        total_decay = jnp.exp(lf_cum[:, -1])          # (b, H)
+        src_decay = jnp.exp(lf_cum[:, -1:, :] - lf_cum)   # decay to chunk end
+        kw = kf * (src_decay * ig)[..., None]
+        C_new = C * total_decay[:, :, None, None] + \
+            jnp.einsum("bchd,bche->bhde", kw, vf)
+        n_new = n * total_decay[:, :, None] + jnp.einsum("bchd->bhd", kw)
+        return (C_new, n_new), out
+
+    (C, n), outs = jax.lax.scan(step, (C0, n0), (qc, kc, vc, lfc, igc))
+    y = jnp.swapaxes(outs, 0, 1).reshape(b, s, H * hd).astype(x.dtype)
+    return y, (C, n)
+
+
+def mlstm_step(p, x: jnp.ndarray, cfg: ModelConfig, quant: QuantConfig,
+               state: Tuple):
+    """Single-token decode.  x: (b, 1, d); state: (C (b,H,hd,hd), n)."""
+    b = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = L.linear(x, p["wq"], q=quant).reshape(b, H, hd).astype(jnp.float32) \
+        * (hd ** -0.5)
+    k = L.linear(x, p["wk"], q=quant).reshape(b, H, hd).astype(jnp.float32) \
+        * (hd ** -0.5)
+    v = L.linear(x, p["wv"], q=quant).reshape(b, H, hd).astype(jnp.float32)
+    log_f, i_gate = _mlstm_gates(p, x, quant)
+    f = jnp.exp(log_f[:, 0])                          # (b, H)
+    ig = i_gate[:, 0]
+    C, n = state
+    C = C * f[:, :, None, None] + jnp.einsum(
+        "bhd,bhe->bhde", k * ig[..., None], v)
+    n = n * f[:, :, None] + k * ig[..., None]
+    h = jnp.einsum("bhde,bhd->bhe", C, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    out = (h / denom[..., None]).reshape(b, 1, H * hd).astype(x.dtype)
+    return out, (C, n)
+
+
+def mlstm_block(p, x, cfg, *, quant, state=None, decode=False):
+    """mLSTM mixer + its internal up/down projection (xLSTM block style)."""
+    if decode:
+        inner, new_state = mlstm_step(p, x, cfg, quant, state)
+    else:
+        inner, new_state = mlstm_scan(p, x, cfg, quant, state)
+    o = L.linear(inner, p["wo"], q=quant)
+    # position-wise gated up/down (xLSTM projects around the mixer)
+    u = L.linear(x + o, p["up"], q=quant)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    return L.linear(u1 * jax.nn.sigmoid(u2.astype(jnp.float32)).astype(
+        x.dtype), p["down"], q=quant), new_state
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32))
+
+
+def mlstm_state_specs(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    return (jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+            jax.ShapeDtypeStruct((batch, H, hd), jnp.float32))
+
+
+MLSTM_STATE_AXES = (("batch", "heads", None, None), ("batch", "heads", None))
+
+
+# ===========================================================================
+# sLSTM (sequential scalar memory)
+# ===========================================================================
+def init_slstm_params(key, cfg: ModelConfig, dtype) -> Dict[str, Param]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), ("embed", "mlp"), dtype=dtype),
+        "r_in": dense_init(ks[1], (d, 4 * d), ("embed", "mlp"),
+                           scale=0.1, dtype=dtype),
+        "b_in": zeros_init((4 * d,), ("mlp",), dtype=dtype),
+        "wo": dense_init(ks[2], (d, d), ("embed", "embed"), dtype=dtype),
+    }
+
+
+def _slstm_cell(p, xt, state, quant):
+    """xt: (b, d); state: (h, c, n, m) each (b, d)."""
+    h, c, n, m = state
+    z = L.linear(xt, p["w_in"], q=quant).astype(jnp.float32) + \
+        L.linear(h, p["r_in"], q=quant).astype(jnp.float32) + \
+        p["b_in"].value.astype(jnp.float32)
+    zi, zf, zz, zo = jnp.split(z, 4, axis=-1)
+    # exponential gating with stabilizer state m (xLSTM Eq. 15-17)
+    log_i = jnp.minimum(zi, 0.0)
+    log_f = -jax.nn.softplus(-zf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(zz)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_scan(p, x, cfg, quant, state=None):
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_state_init(cfg, b)
+
+    def step(carry, xt):
+        new = _slstm_cell(p, xt, carry, quant)
+        return new, new[0]
+
+    state_f = tuple(t.astype(jnp.float32) for t in state)
+    final, hs = jax.lax.scan(step, state_f, jnp.swapaxes(x, 0, 1))
+    y = jnp.swapaxes(hs, 0, 1).astype(x.dtype)
+    return L.linear(y, p["wo"], q=quant), final
+
+
+def slstm_step(p, x, cfg, quant, state):
+    new = _slstm_cell(p, x[:, 0], state, quant)
+    return L.linear(new[0][:, None].astype(x.dtype), p["wo"], q=quant), new
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, z)
+
+
+def slstm_state_specs(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    s = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    return (s, s, s, s)
+
+
+SLSTM_STATE_AXES = tuple(("batch", None) for _ in range(4))

@@ -1,0 +1,522 @@
+"""Transformer stacks: decoder-only LM (all LM archs) and encoder-decoder.
+
+Layer stacks are expressed as a repeating *unit* of block kinds
+(cfg.unit x cfg.n_units + cfg.tail) and executed with jax.lax.scan over
+stacked per-unit parameters — HLO size stays O(unit) regardless of depth
+(deepseek-67b's 95 layers compile as one scanned unit + tail).
+
+Block kinds: 'attn' (GQA attention), 'rec' (RG-LRU), 'mlstm', 'slstm'.
+Every block is pre-norm residual; 'attn'/'rec' blocks carry an FFN
+sub-block (cfg.ffn_kind: swiglu/geglu/gelu/moe), xLSTM kinds are
+self-contained.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mx_types import QuantConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.model_api import (ModelConfig, Param, dense_init,
+                                    ones_init, axes_tree, is_param)
+
+
+# ===========================================================================
+# block init / apply
+# ===========================================================================
+def _init_ffn_params(key, cfg: ModelConfig, dtype):
+    kind = cfg.ffn_kind
+    ks = jax.random.split(key, 3)
+    if kind == "moe":
+        return M.init_moe_params(key, cfg, dtype)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(ks[0], (cfg.d_model, cfg.d_ff),
+                             ("embed", "mlp"), dtype=dtype),
+            "wg": dense_init(ks[1], (cfg.d_model, cfg.d_ff),
+                             ("embed", "mlp"), dtype=dtype),
+            "wo": dense_init(ks[2], (cfg.d_ff, cfg.d_model),
+                             ("mlp", "embed"), dtype=dtype),
+        }
+    if kind == "gelu":
+        return {
+            "wi": dense_init(ks[0], (cfg.d_model, cfg.d_ff),
+                             ("embed", "mlp"), dtype=dtype),
+            "wo": dense_init(ks[1], (cfg.d_ff, cfg.d_model),
+                             ("mlp", "embed"), dtype=dtype),
+        }
+    if kind == "none":
+        return {}
+    raise ValueError(kind)
+
+
+def init_block_params(key, kind: str, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"ln1": ones_init((cfg.d_model,), ("embed",),
+                                          dtype=dtype)}
+    if kind == "attn":
+        p["mix"] = A.init_attn_params(k1, cfg, dtype)
+    elif kind == "rec":
+        p["mix"] = R.init_rglru_params(k1, cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = R.init_mlstm_params(k1, cfg, dtype)
+        return p                       # self-contained, no ffn
+    elif kind == "slstm":
+        p["mix"] = R.init_slstm_params(k1, cfg, dtype)
+        return p
+    else:
+        raise ValueError(kind)
+    if cfg.ffn_kind != "none":
+        p["ln2"] = ones_init((cfg.d_model,), ("embed",), dtype=dtype)
+        p["ffn"] = _init_ffn_params(k2, cfg, dtype)
+    return p
+
+
+def apply_block(p, kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
+                quant: QuantConfig, positions=None, cache=None,
+                cache_index=None, decode: bool = False):
+    """Pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(x, p["ln1"], q=quant, eps=cfg.norm_eps)
+    if kind == "attn":
+        window = cfg.local_attn_window or cfg.window
+        o, new_cache = A.attention(
+            p["mix"], h, cfg, quant=quant, positions=positions,
+            cache=cache, cache_index=cache_index, window=window)
+    elif kind == "rec":
+        o, new_cache = R.rglru_block(p["mix"], h, cfg, quant=quant,
+                                     state=cache, decode=decode)
+    elif kind == "mlstm":
+        o, new_cache = R.mlstm_block(p["mix"], h, cfg, quant=quant,
+                                     state=cache, decode=decode)
+        return x + o, new_cache, aux
+    elif kind == "slstm":
+        if decode:
+            o, new_cache = R.slstm_step(p["mix"], h, cfg, quant, cache)
+        else:
+            o, new_cache = R.slstm_scan(p["mix"], h, cfg, quant, cache)
+        return x + o, new_cache, aux
+    else:
+        raise ValueError(kind)
+    x = x + o
+    if cfg.ffn_kind != "none" and "ffn" in p:
+        h2 = L.rmsnorm(x, p["ln2"], q=quant, eps=cfg.norm_eps)
+        if cfg.ffn_kind == "moe":
+            f, aux = M.moe_ffn(h2, p["ffn"], cfg, quant=quant)
+        else:
+            f = L.ffn(h2, p["ffn"], cfg.ffn_kind, quant)
+        x = x + f
+    return x, new_cache, aux
+
+
+# ===========================================================================
+# cache constructors per kind
+# ===========================================================================
+def block_cache_init(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind == "attn":
+        window = cfg.local_attn_window or cfg.window
+        return A.init_kv_cache(cfg, batch, max_len, window, dtype)
+    if kind == "rec":
+        return R.rglru_state_init(cfg, batch, dtype)
+    if kind == "mlstm":
+        return R.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return R.slstm_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_cache_specs(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                      dtype):
+    if kind == "attn":
+        window = cfg.local_attn_window or cfg.window
+        return A.kv_cache_specs(cfg, batch, max_len, window, dtype)
+    if kind == "rec":
+        return R.rglru_state_specs(cfg, batch, dtype)
+    if kind == "mlstm":
+        return R.mlstm_state_specs(cfg, batch)
+    if kind == "slstm":
+        return R.slstm_state_specs(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_cache_axes(kind: str):
+    if kind == "attn":
+        return A.CACHE_AXES_TREE
+    if kind == "rec":
+        return R.RGLRU_STATE_AXES
+    if kind == "mlstm":
+        return R.MLSTM_STATE_AXES
+    if kind == "slstm":
+        return R.SLSTM_STATE_AXES
+    raise ValueError(kind)
+
+
+def _stack_tree(tree, n: int):
+    """Add a leading n_units axis to ShapeDtypeStructs."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def _stack_axes(tree):
+    return jax.tree_util.tree_map(
+        lambda axes: ("layers",) + tuple(axes), tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+# ===========================================================================
+# stacked-unit init
+# ===========================================================================
+def _stacked_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree_util.tree_map(
+        lambda pr: Param(pr.value, ("layers",) + tuple(pr.axes)),
+        stacked, is_leaf=is_param)
+
+
+# ===========================================================================
+# DecoderLM
+# ===========================================================================
+class DecoderLM:
+    """Every decoder-only LM arch (dense / moe / hybrid / ssm / vlm)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+
+    # -- params -----------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = cfg.dtype
+        keys = jax.random.split(rng, 4 + len(cfg.unit) + len(cfg.tail))
+        params: Dict[str, Any] = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model),
+                                ("vocab", "embed"), scale=0.02, dtype=dtype),
+            "final_norm": ones_init((cfg.d_model,), ("embed",), dtype=dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(
+                keys[1], (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                scale=0.02, dtype=dtype)
+        if cfg.vision_tokens:
+            params["vision_proj"] = dense_init(
+                keys[2], (cfg.vision_dim, cfg.d_model), (None, "embed"),
+                dtype=dtype)
+        units = {}
+        for j, kind in enumerate(cfg.unit):
+            units[f"u{j}_{kind}"] = _stacked_init(
+                lambda k, kind=kind: init_block_params(k, kind, cfg, dtype),
+                keys[3 + j], cfg.resolved_n_units)
+        params["units"] = units
+        tail = {}
+        for j, kind in enumerate(cfg.tail):
+            tail[f"t{j}_{kind}"] = init_block_params(
+                keys[3 + len(cfg.unit) + j], kind, cfg, dtype)
+        params["tail"] = tail
+        return params
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # -- cache --------------------------------------------------------------
+    def cache_init(self, batch: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        fn = block_cache_specs if abstract else block_cache_init
+        n = cfg.resolved_n_units
+        cache = {"units": {}, "tail": {}, "index": (
+            jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))}
+        for j, kind in enumerate(cfg.unit):
+            c = fn(kind, cfg, batch, max_len, cfg.dtype)
+            cache["units"][f"u{j}_{kind}"] = (
+                _stack_tree(c, n) if abstract else
+                jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n,) + a.shape), c))
+        for j, kind in enumerate(cfg.tail):
+            cache["tail"][f"t{j}_{kind}"] = fn(kind, cfg, batch, max_len,
+                                               cfg.dtype)
+        return cache
+
+    def cache_axes(self):
+        cfg = self.cfg
+        axes = {"units": {}, "tail": {}, "index": ()}
+        for j, kind in enumerate(cfg.unit):
+            axes["units"][f"u{j}_{kind}"] = jax.tree_util.tree_map(
+                lambda a: ("layers",) + tuple(a), block_cache_axes(kind),
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    y is None or isinstance(y, str) for y in x))
+        for j, kind in enumerate(cfg.tail):
+            axes["tail"][f"t{j}_{kind}"] = block_cache_axes(kind)
+        return axes
+
+    # -- forward ------------------------------------------------------------
+    def _embed_inputs(self, params, tokens, vision_embeds):
+        cfg = self.cfg
+        x = L.embed_lookup(tokens, params["embed"], cfg.quant, cfg.dtype)
+        if cfg.vision_tokens and vision_embeds is not None:
+            v = L.linear(vision_embeds.astype(cfg.dtype),
+                         params["vision_proj"], q=cfg.quant)
+            x = jax.lax.dynamic_update_slice(x, v, (0, 0, 0))
+        return x
+
+    def _run_stack(self, params, x, *, positions, cache, cache_index,
+                   decode):
+        cfg = self.cfg
+        quant = cfg.quant
+        aux_total = jnp.zeros((), jnp.float32)
+
+        unit_params = params["units"]
+        unit_cache = cache["units"] if cache is not None else None
+
+        def unit_step(carry, xs):
+            x, aux = carry
+            up, uc = xs
+            new_uc = {}
+            for j, kind in enumerate(cfg.unit):
+                key = f"u{j}_{kind}"
+                c_in = uc[key] if uc is not None else None
+                x, c_out, a = apply_block(
+                    up[key], kind, x, cfg, quant=quant, positions=positions,
+                    cache=c_in, cache_index=cache_index, decode=decode)
+                aux = aux + a
+                if c_out is not None:
+                    new_uc[key] = c_out
+            return (x, aux), new_uc
+
+        # remat is a gradient-memory tool: apply it only on the training
+        # path.  Checkpointing inference (prefill/decode) forces the scan
+        # carry through save/restore round-trips for no benefit.
+        if cfg.remat in ("block", "full") and cache is None:
+            unit_step = jax.checkpoint(unit_step)
+
+        (x, aux_total), new_unit_cache = jax.lax.scan(
+            unit_step, (x, aux_total),
+            (unit_params, unit_cache) if unit_cache is not None
+            else (unit_params, None))
+
+        new_tail_cache = {}
+        for j, kind in enumerate(cfg.tail):
+            key = f"t{j}_{kind}"
+            c_in = cache["tail"][key] if cache is not None else None
+            x, c_out, a = apply_block(
+                params["tail"][key], kind, x, cfg, quant=quant,
+                positions=positions, cache=c_in, cache_index=cache_index,
+                decode=decode)
+            aux_total = aux_total + a
+            if c_out is not None:
+                new_tail_cache[key] = c_out
+
+        x = L.rmsnorm(x, params["final_norm"], q=quant, eps=cfg.norm_eps)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"units": new_unit_cache, "tail": new_tail_cache,
+                         "index": (cache_index + x.shape[1])}
+        return x, new_cache, aux_total
+
+    def logits(self, params, x):
+        cfg = self.cfg
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return L.unembed(x, table, cfg.quant)
+
+    # -- public entry points --------------------------------------------------
+    def loss(self, params, batch) -> jnp.ndarray:
+        """batch: {'tokens': (b, s) int32, 'loss_mask': (b, s) f32 optional,
+        'vision_embeds': optional}."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_inputs(params, tokens, batch.get("vision_embeds"))
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, _, aux = self._run_stack(params, x, positions=positions,
+                                    cache=None, cache_index=None,
+                                    decode=False)
+        logits = self.logits(params, x[:, :-1])
+        targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        mask = mask[:, 1:] if mask is not None else jnp.ones_like(nll)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + aux
+
+    def prefill(self, params, tokens, cache, vision_embeds=None):
+        """Writes the prompt into the cache; returns (last_logits, cache)."""
+        x = self._embed_inputs(params, tokens, vision_embeds)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, cache, _ = self._run_stack(
+            params, x, positions=positions, cache=cache,
+            cache_index=jnp.zeros((), jnp.int32), decode=False)
+        return self.logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, token, cache):
+        """token: (b, 1).  One autoregressive step at cache['index']."""
+        x = self._embed_inputs(params, token, None)
+        idx = cache["index"]
+        x, cache, _ = self._run_stack(
+            params, x, positions=None, cache=cache, cache_index=idx,
+            decode=True)
+        return self.logits(params, x), cache
+
+
+# ===========================================================================
+# Encoder-decoder (seamless-m4t style)
+# ===========================================================================
+class EncDecLM:
+    """Encoder-decoder with a stubbed modality frontend: the encoder input
+    is precomputed frame embeddings (b, s_enc, d_model)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _enc_cfg(self):
+        import dataclasses as dc
+        return dc.replace(self.cfg, unit=("attn",),
+                          n_units=self.cfg.n_encoder_layers, tail=(),
+                          ffn_kind="gelu")
+
+    def init(self, rng):
+        cfg = self.cfg
+        dtype = cfg.dtype
+        keys = jax.random.split(rng, 8)
+        enc_cfg = self._enc_cfg()
+        params = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model),
+                                ("vocab", "embed"), scale=0.02, dtype=dtype),
+            "enc_blocks": _stacked_init(
+                lambda k: init_block_params(k, "attn", enc_cfg, dtype),
+                keys[1], cfg.n_encoder_layers),
+            "enc_norm": ones_init((cfg.d_model,), ("embed",), dtype=dtype),
+            "dec_blocks": _stacked_init(
+                lambda k: self._init_dec_block(k, dtype),
+                keys[2], cfg.n_layers),
+            "final_norm": ones_init((cfg.d_model,), ("embed",), dtype=dtype),
+            "unembed": dense_init(keys[3], (cfg.vocab, cfg.d_model),
+                                  ("vocab", "embed"), scale=0.02,
+                                  dtype=dtype),
+        }
+        return params
+
+    def _init_dec_block(self, key, dtype):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        return {
+            "ln1": ones_init((cfg.d_model,), ("embed",), dtype=dtype),
+            "self_attn": A.init_attn_params(ks[0], cfg, dtype),
+            "ln_x": ones_init((cfg.d_model,), ("embed",), dtype=dtype),
+            "cross_attn": A.init_attn_params(ks[1], cfg, dtype, cross=True),
+            "ln2": ones_init((cfg.d_model,), ("embed",), dtype=dtype),
+            "ffn": _init_ffn_params(ks[2], self._enc_cfg(), dtype),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        quant = cfg.quant
+        x = frames.astype(cfg.dtype)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def step(x, bp):
+            h = L.rmsnorm(x, bp["ln1"], q=quant, eps=cfg.norm_eps)
+            o, _ = A.attention(bp["mix"], h, cfg, quant=quant,
+                               positions=positions, causal=False)
+            x = x + o
+            h2 = L.rmsnorm(x, bp["ln2"], q=quant, eps=cfg.norm_eps)
+            return x + L.ffn(h2, bp["ffn"], "gelu", quant), None
+
+        x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+        return L.rmsnorm(x, params["enc_norm"], q=quant, eps=cfg.norm_eps)
+
+    def _dec_stack(self, params, x, enc_kv, *, cache, cache_index, decode):
+        cfg = self.cfg
+        quant = cfg.quant
+        positions = None if decode else jnp.arange(x.shape[1])[None, :]
+
+        def step(x, xs):
+            bp, ekv, c = xs
+            h = L.rmsnorm(x, bp["ln1"], q=quant, eps=cfg.norm_eps)
+            o, new_c = A.attention(bp["self_attn"], h, cfg, quant=quant,
+                                   positions=positions, cache=c,
+                                   cache_index=cache_index)
+            x = x + o
+            hx = L.rmsnorm(x, bp["ln_x"], q=quant, eps=cfg.norm_eps)
+            ox, _ = A.attention(bp["cross_attn"], hx, cfg, quant=quant,
+                                kv_override=ekv, causal=False,
+                                use_rope=False)
+            x = x + ox
+            h2 = L.rmsnorm(x, bp["ln2"], q=quant, eps=cfg.norm_eps)
+            x = x + L.ffn(h2, bp["ffn"], "gelu", quant)
+            return x, new_c
+
+        x, new_cache = jax.lax.scan(
+            step, x, (params["dec_blocks"], enc_kv, cache))
+        x = L.rmsnorm(x, params["final_norm"], q=quant, eps=cfg.norm_eps)
+        return x, new_cache
+
+    def encode_kv(self, params, memory):
+        """Precompute per-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+
+        def one(bp):
+            k = L.linear(memory, bp["cross_attn"]["wk"], q=cfg.quant)
+            v = L.linear(memory, bp["cross_attn"]["wv"], q=cfg.quant)
+            return (k.reshape(*memory.shape[:2], kvh, hd),
+                    v.reshape(*memory.shape[:2], kvh, hd))
+
+        return jax.vmap(one, in_axes=0, out_axes=0)(params["dec_blocks"])
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        frames = batch["frames"]
+        tokens = batch["tokens"]
+        memory = self.encode(params, frames)
+        enc_kv = self.encode_kv(params, memory)
+        x = L.embed_lookup(tokens, params["embed"], cfg.quant, cfg.dtype)
+        x, _ = self._dec_stack(params, x, enc_kv, cache=None,
+                               cache_index=None, decode=False)
+        logits = L.unembed(x[:, :-1], params["unembed"], cfg.quant)
+        targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], -1)[..., 0]
+        return jnp.mean(nll)
+
+    def cache_init(self, batch, max_len, abstract=False):
+        cfg = self.cfg
+        fn = block_cache_specs if abstract else block_cache_init
+        c = fn("attn", cfg, batch, max_len, cfg.dtype)
+        n = cfg.n_layers
+        if abstract:
+            self_c = _stack_tree(c, n)
+        else:
+            self_c = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+        return {"self": self_c,
+                "index": jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                else jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, frames, tokens, cache):
+        cfg = self.cfg
+        memory = self.encode(params, frames)
+        enc_kv = self.encode_kv(params, memory)
+        x = L.embed_lookup(tokens, params["embed"], cfg.quant, cfg.dtype)
+        x, new_self = self._dec_stack(params, x, enc_kv, cache=cache["self"],
+                                      cache_index=jnp.zeros((), jnp.int32),
+                                      decode=False)
+        logits = L.unembed(x[:, -1:], params["unembed"], cfg.quant)
+        return logits, {"self": new_self, "enc_kv": enc_kv,
+                        "index": cache["index"] + tokens.shape[1]}
+
+    def decode_step(self, params, token, cache):
+        cfg = self.cfg
+        x = L.embed_lookup(token, params["embed"], cfg.quant, cfg.dtype)
+        x, new_self = self._dec_stack(
+            params, x, cache["enc_kv"], cache=cache["self"],
+            cache_index=cache["index"], decode=True)
+        logits = L.unembed(x, params["unembed"], cfg.quant)
+        return logits, {"self": new_self, "enc_kv": cache["enc_kv"],
+                        "index": cache["index"] + 1}

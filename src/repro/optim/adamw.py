@@ -1,0 +1,85 @@
+"""AdamW on raw pytrees (Param wrappers pass through transparently).
+
+Moments are stored in f32 regardless of param dtype (bf16 params keep f32
+master statistics; the update is computed in f32 and cast back).  Moment
+trees share the params' logical sharding axes, so optimizer state shards
+exactly like the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    f32zeros = lambda v: jnp.zeros(v.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32zeros, params),
+        nu=jax.tree_util.tree_map(f32zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm
+
+
+def adamw_update(grads, state: AdamWState, params, lr: jnp.ndarray,
+                 cfg: AdamWConfig):
+    """Returns (new_params, new_state, grad_norm)."""
+    if cfg.clip_norm > 0:
+        grads, norm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        norm = global_norm(grads)
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m_new, v_new
+
+    flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    is_triple = lambda x: (isinstance(x, tuple) and len(x) == 3
+                           and not hasattr(x, "_fields"))
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=is_triple)
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_triple)
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=is_triple)
+    return new_params, AdamWState(step, new_mu, new_nu), norm

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (LOGICAL_RULES, logical_to_pspec,
+                                     params_pspecs, maybe_constraint,
+                                     named_sharding_tree, ShardingRules)

@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules: map Param axes onto mesh axes.
+
+The production mesh has axes ("pod", "data", "model") (multi-pod) or
+("data", "model") (single pod).  Logical axis names used by the model zoo:
+
+  batch      -> (pod, data)        activations / inputs
+  seq        -> None by default; 'data' under sequence-parallel decode
+  embed      -> None               d_model stays replicated across TP
+  q_heads    -> model              attention heads (TP)
+  kv_heads   -> model              KV heads (TP; replicated if fewer heads
+                                   than shards — GSPMD handles the remainder)
+  mlp        -> model              FFN hidden
+  vocab      -> model              embedding / unembedding tables
+  expert     -> model              MoE expert dim (EP)
+  lru        -> model              recurrent channel dim
+  layers     -> None               stacked-scan leading dim
+  fsdp       -> data               optional ZeRO-style param shard (hillclimb)
+
+Rules are a dataclass so perf iterations can swap assignments per run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: Optional[Tuple[str, ...]] = ("pod", "data")
+    seq: Optional[str] = None
+    embed: Optional[str] = None
+    q_heads: Optional[str] = "model"
+    kv_heads: Optional[str] = "model"
+    heads: Optional[str] = "model"
+    mlp: Optional[str] = "model"
+    vocab: Optional[str] = "model"
+    expert: Optional[str] = "model"
+    lru: Optional[str] = "model"
+    layers: Optional[str] = None
+    kv_seq: Optional[str] = None           # sequence-parallel KV (long ctx)
+    patch: Optional[str] = None
+    classes: Optional[str] = None
+    conv: Optional[str] = None
+    pods: Optional[str] = "pod"            # per-pod state (error feedback)
+    cap: Optional[Tuple[str, ...]] = ("pod", "data")  # MoE dispatch capacity
+    fsdp: Optional[str] = None             # set to "data" for ZeRO-style
+
+    def get(self, name: Optional[str]):
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+LOGICAL_RULES = ShardingRules()
+
+
+def _filter_axes(assignment, mesh_axis_names):
+    """Drop mesh axes absent from the current mesh (single-pod drops 'pod')."""
+    if assignment is None:
+        return None
+    if isinstance(assignment, str):
+        return assignment if assignment in mesh_axis_names else None
+    kept = tuple(a for a in assignment if a in mesh_axis_names)
+    return kept if kept else None
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...],
+                     rules: ShardingRules,
+                     mesh_axis_names,
+                     shape: Optional[Tuple[int, ...]] = None,
+                     mesh_shape: Optional[dict] = None) -> P:
+    """Logical axes tuple -> PartitionSpec.
+
+    Drops mesh axes absent from the current mesh, de-duplicates (a mesh axis
+    may appear once per spec), and — when ``shape`` is given — prunes mesh
+    axes that do not divide the dimension (e.g. vocab=49155 over model=16,
+    MQA kv_heads=1): the longest divisible prefix of the assignment is kept,
+    so a (pod, data) batch assignment degrades gracefully to (pod,) or
+    replication for small dims."""
+    used = set()
+    out = []
+    for i, name in enumerate(axes):
+        a = _filter_axes(rules.get(name), mesh_axis_names)
+        if a is None:
+            out.append(None)
+            continue
+        names = (a,) if isinstance(a, str) else a
+        names = tuple(n for n in names if n not in used)
+        if shape is not None and mesh_shape is not None and i < len(shape):
+            while names:
+                prod = 1
+                for n in names:
+                    prod *= mesh_shape[n]
+                if prod > 0 and shape[i] % prod == 0:
+                    break
+                names = names[:-1]
+        used.update(names)
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def params_pspecs(axes_pytree, rules: ShardingRules, mesh: Mesh):
+    """Map an axes pytree (from model_api.axes_tree) to PartitionSpecs."""
+    names = mesh.axis_names
+    return jax.tree_util.tree_map(
+        lambda axes: logical_to_pspec(axes, rules, names),
+        axes_pytree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def named_sharding_tree(axes_pytree, rules: ShardingRules, mesh: Mesh):
+    specs = params_pspecs(axes_pytree, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def maybe_constraint(x: jnp.ndarray, axes: Tuple[Optional[str], ...]):
+    """with_sharding_constraint when tracing under a mesh, else identity."""
+    env_mesh = None
+    try:
+        env_mesh = jax.sharding.get_abstract_mesh()
+        if env_mesh is not None and env_mesh.empty:
+            env_mesh = None
+    except Exception:
+        env_mesh = None
+    if env_mesh is None:
+        return x
+    spec = logical_to_pspec(axes, LOGICAL_RULES, env_mesh.axis_names)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

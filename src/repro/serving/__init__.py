@@ -1,0 +1,4 @@
+from repro.serving.engine import (ServeConfig, make_prefill_step,
+                                  make_decode_step, pack_params_mxint,
+                                  ServingEngine)
+from repro.serving.scheduler import BatchScheduler, Request

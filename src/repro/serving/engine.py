@@ -1,0 +1,182 @@
+"""Serving: packed-MXInt weights, prefill/decode step builders, engine.
+
+``pack_params_mxint`` converts linear/embedding Param leaves to MXTensor
+planes (int8 mantissas + int8 shared exponents) — the paper's weight
+format.  The serving dry-run lowers with these packed leaves, so
+``memory_analysis()`` shows the real ~4x HBM reduction (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mx_types import MXFormat, QuantConfig
+from repro.core.quantize import MXTensor, pack_weight
+from repro.models.model_api import Param, is_param
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 4096
+    batch: int = 8
+    pack_weights: bool = False
+    weight_fmt: MXFormat = None
+    temperature: float = 0.0          # 0 = greedy
+
+    def __post_init__(self):
+        if self.pack_weights and self.weight_fmt is None:
+            from repro.core.mx_types import MXINT6_WEIGHT
+            object.__setattr__(self, "weight_fmt", MXINT6_WEIGHT)
+
+
+# ---------------------------------------------------------------------------
+# weight packing
+# ---------------------------------------------------------------------------
+_PACK_MIN_SIZE = 1 << 14       # don't pack tiny tensors (norm scales, biases)
+
+
+def _should_pack(p: Param) -> bool:
+    v = p.value
+    shape = getattr(v, "shape", ())
+    axes = p.axes
+    # the logical kernel excludes a leading stacked-layers dim
+    eff = shape[1:] if axes and axes[0] == "layers" else shape
+    if len(eff) < 2:
+        return False            # norm scales / biases stay un-packed
+    size = 1
+    for s in shape:
+        size *= s
+    if size < _PACK_MIN_SIZE:
+        return False
+    # blocks along a tiny contraction dim (e.g. width-4 conv taps) are
+    # pointless and would leave a degenerate exponent plane
+    return shape[_contraction_axis(p)] >= 16
+
+
+def _contraction_axis(p: Param) -> int:
+    """Blocks run along the reduction dim of the consuming matmul:
+      * expert-stacked kernels (E, d_in, d_out): axis 1;
+      * embedding/unembedding tables (vocab, d): axis 1 (rows are looked up
+        whole; unembed contracts d);
+      * plain 2-D kernels (d_in, d_out): axis 0.
+    Never a sharded-output axis, so shared exponents never straddle shards
+    (DESIGN.md §8)."""
+    axes = p.axes
+    if axes and axes[0] == "expert":
+        return 1
+    if axes and axes[0] in ("vocab", "classes"):
+        return len(axes) - 1
+    return max(len(axes) - 2, 0)
+
+
+_TP_LOGICAL = ("q_heads", "kv_heads", "heads", "mlp", "vocab", "expert",
+               "lru")
+
+
+def pack_params_mxint(params, fmt: MXFormat, abstract: bool = False,
+                      tp_shards: int = 1):
+    """Param tree -> Param tree with MXTensor values on large matmul
+    weights.  ``abstract=True`` produces ShapeDtypeStruct planes for the
+    dry-run (no allocation).
+
+    ``tp_shards``: when the contraction axis is tensor-parallel (row-
+    parallel wo/down projections), the block size is clamped to the
+    PER-SHARD contraction length so shared exponents never straddle shard
+    boundaries (DESIGN.md §8) and the exponent plane shards exactly like
+    the mantissa plane.
+    """
+    import dataclasses as _dc
+    from repro.core.quantize import _resolve_block
+
+    def pack(p: Param) -> Param:
+        if not _should_pack(p):
+            return p
+        axis = _contraction_axis(p)
+        v = p.value
+        k_len = v.shape[axis]
+        eff_fmt = fmt
+        if tp_shards > 1 and p.axes[axis] in _TP_LOGICAL and \
+                k_len % tp_shards == 0:
+            per_shard = k_len // tp_shards
+            block = _resolve_block(per_shard, fmt.block_size)
+            eff_fmt = _dc.replace(fmt, block_size=block)
+        if abstract:
+            block = _resolve_block(k_len, eff_fmt.block_size)
+            eshape = list(v.shape)
+            eshape[axis] //= block
+            mx = MXTensor(
+                jax.ShapeDtypeStruct(v.shape, eff_fmt.mant_dtype),
+                jax.ShapeDtypeStruct(tuple(eshape), jnp.int8),
+                axis - len(v.shape), eff_fmt.mant_bits, block)
+        else:
+            mx = pack_weight(v.astype(jnp.float32), eff_fmt, axis=axis)
+        return Param(mx, p.axes)
+
+    return jax.tree_util.tree_map(pack, params, is_leaf=is_param)
+
+
+def packed_param_axes(params):
+    """Axes prefix tree for packed params: MXTensor has two leaves
+    (mantissa, exponent); the exponent inherits the mantissa's axes with the
+    block axis shrunk — the same PartitionSpec applies to both, so the Param
+    level prefix works unchanged."""
+    from repro.models.model_api import axes_tree
+    return axes_tree(params)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_prefill_step(model) -> Callable:
+    cfg = model.cfg
+
+    def prefill_step(params, batch, cache):
+        if cfg.is_encoder_decoder:
+            return model.prefill(params, batch["frames"], batch["tokens"],
+                                 cache)
+        return model.prefill(params, batch["tokens"], cache,
+                             batch.get("vision_embeds"))
+
+    return prefill_step
+
+
+def make_decode_step(model, temperature: float = 0.0) -> Callable:
+    def decode_step(params, tokens, cache, rng=None):
+        logits, cache = model.decode_step(params, tokens, cache)
+        if temperature > 0.0 and rng is not None:
+            nxt = jax.random.categorical(
+                rng, logits[:, -1].astype(jnp.float32) / temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# engine (host-side loop; used by examples and integration tests)
+# ---------------------------------------------------------------------------
+class ServingEngine:
+    def __init__(self, model, params, serve_cfg: ServeConfig):
+        self.model = model
+        self.cfg = serve_cfg
+        if serve_cfg.pack_weights:
+            params = pack_params_mxint(params, serve_cfg.weight_fmt)
+        self.params = params
+        self._prefill = jax.jit(make_prefill_step(model))
+        self._decode = jax.jit(make_decode_step(model,
+                                                serve_cfg.temperature))
+
+    def generate(self, batch, max_new_tokens: int = 16):
+        cache = self.model.cache_init(batch["tokens"].shape[0],
+                                      self.cfg.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        for _ in range(max_new_tokens - 1):
+            tok, cache = self._decode(self.params, tok, cache)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,94 @@
+"""Continuous-batching-lite request scheduler (host side).
+
+Maintains a fixed-width decode batch; finished or empty slots are refilled
+from the waiting queue at step boundaries (the cache slots are reused, the
+jitted decode step never re-specializes because the batch shape is fixed).
+This is the scheduling layer a real serving deployment needs around the
+jitted steps; the dry-run lowers the steps themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (s,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    def __init__(self, engine, batch_size: int, eos_id: Optional[int] = None):
+        self.engine = engine
+        self.batch = batch_size
+        self.eos = eos_id
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * batch_size
+        self._tok = None
+        self._cache = None
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.active) if r is None or r.done]
+
+    def _admit(self):
+        """Fill free slots; prefill runs per admission wave (padded batch)."""
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        admitted = []
+        for i in free:
+            if not self.queue:
+                break
+            self.active[i] = self.queue.popleft()
+            admitted.append(i)
+        if not admitted:
+            return
+        # pad all prompts to a common length, full-batch prefill
+        max_len = max(len(self.active[i].prompt) for i in admitted
+                      if self.active[i] is not None)
+        prompts = np.zeros((self.batch, max_len), np.int32)
+        for i in admitted:
+            p = self.active[i].prompt
+            prompts[i, -len(p):] = p     # left-pad
+        cache = self.engine.model.cache_init(self.batch,
+                                             self.engine.cfg.max_len)
+        logits, cache = self.engine._prefill(
+            self.engine.params, {"tokens": jnp.asarray(prompts)}, cache)
+        self._cache = cache
+        self._tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+    def step(self) -> int:
+        """One decode step across the active batch; returns #live requests."""
+        self._admit()
+        live = [r for r in self.active if r is not None and not r.done]
+        if not live or self._tok is None:
+            return 0
+        self._tok, self._cache = self.engine._decode(
+            self.engine.params, self._tok, self._cache)
+        toks = np.asarray(self._tok[:, 0])
+        for i, r in enumerate(self.active):
+            if r is None or r.done:
+                continue
+            t = int(toks[i])
+            r.generated.append(t)
+            if (self.eos is not None and t == self.eos) or \
+                    len(r.generated) >= r.max_new_tokens:
+                r.done = True
+        return sum(1 for r in self.active if r is not None and not r.done)
+
+    def run(self, max_steps: int = 1024) -> List[Request]:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return [r for r in self.active if r is not None]

@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, make_train_state, train_state_axes
+from repro.train.step import make_train_step, make_eval_step

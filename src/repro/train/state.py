@@ -1,0 +1,56 @@
+"""Train state: params + AdamW moments + step, with logical-axes plumbing."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import Param, axes_tree, is_param
+from repro.optim.adamw import AdamWState, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any                  # Param-wrapped pytree
+    opt: AdamWState
+    step: jnp.ndarray
+    err_fb: Any = None           # gradient-compression error feedback
+
+
+def make_train_state(model, rng, *, grad_compression: bool = False,
+                     n_pods: int = 1) -> TrainState:
+    params = model.init(rng)
+    opt = adamw_init(params)
+    err = None
+    if grad_compression:
+        # per-pod error-feedback residuals: leading n_pods axis, P('pod')
+        err = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32), err_fb=err)
+
+
+def abstract_train_state(model, *, grad_compression: bool = False,
+                         n_pods: int = 1) -> TrainState:
+    """ShapeDtypeStruct version — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: make_train_state(model, jax.random.key(0),
+                                 grad_compression=grad_compression,
+                                 n_pods=n_pods))
+
+
+def train_state_axes(state: TrainState) -> TrainState:
+    """Logical-axes tree matching the state structure (prefix tree for
+    in_shardings)."""
+    p_axes = axes_tree(state.params)
+    err_axes = None
+    if state.err_fb is not None:
+        err_axes = jax.tree_util.tree_map(
+            lambda p: ("pods",) + tuple(p.axes), state.params,
+            is_leaf=is_param)
+    return TrainState(
+        params=p_axes,
+        opt=AdamWState(step=(), mu=p_axes, nu=p_axes),
+        step=(),
+        err_fb=err_axes,
+    )

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced configs of the same family run one
+forward + gradient step (and a prefill/decode step) on CPU; outputs must
+have the right shapes and contain no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, smoke_config, full_config
+from repro.configs.deit import DEIT_MICRO, BY_NAME
+from repro.models import build_model, unwrap
+
+
+def _batch_for(cfg, b=2, s=16):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, s)).astype(np.int32))}
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vision_tokens, cfg.vision_dim))
+            .astype(np.float32))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)).astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss={float(loss)}"
+    leaves = jax.tree_util.tree_leaves(unwrap(grads))
+    assert leaves, arch
+    for g in leaves:
+        assert np.isfinite(np.asarray(g, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    batch = _batch_for(cfg)
+    cache = model.cache_init(2, 32)
+    if cfg.is_encoder_decoder:
+        logits, cache = model.prefill(params, batch["frames"],
+                                      batch["tokens"], cache)
+    else:
+        logits, cache = model.prefill(params, batch["tokens"], cache,
+                                      batch.get("vision_embeds"))
+    assert logits.shape == (2, 1, cfg.vocab), (arch, logits.shape)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode_step(params, tok, cache)
+        assert logits.shape == (2, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config must carry the exact published dims."""
+    expected = {
+        "llava_next_mistral_7b": (32, 4096, 32, 8, 14336, 32000),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "llama3_8b": (32, 4096, 32, 8, 14336, 128256),
+        "deepseek_67b": (95, 8192, 64, 8, 22016, 102400),
+        "phi4_mini_3_8b": (32, 3072, 24, 8, 8192, 200064),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "granite_moe_3b_a800m": (32, 1536, 24, 8, 512, 49155),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+    }[arch]
+    cfg = full_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected, (arch, got, expected)
+    cfg.validate()
+    # family-specific invariants
+    if arch == "mixtral_8x7b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+        assert cfg.window == 4096
+    if arch == "granite_moe_3b_a800m":
+        assert cfg.moe.num_experts == 40 and cfg.moe.top_k == 8
+    if arch == "qwen3_14b":
+        assert cfg.qk_norm
+    if arch == "recurrentgemma_2b":
+        assert cfg.unit == ("rec", "rec", "attn") and cfg.tail == ("rec",
+                                                                   "rec")
+    if arch == "xlstm_350m":
+        assert cfg.unit.count("slstm") == 1 and cfg.unit.count("mlstm") == 7
+    if arch == "seamless_m4t_medium":
+        assert cfg.is_encoder_decoder and cfg.n_encoder_layers == 12
+    if arch == "llava_next_mistral_7b":
+        assert cfg.vision_tokens == 2880
+
+
+@pytest.mark.parametrize("name", ["deit_tiny", "deit_small", "deit_base"])
+def test_deit_configs(name):
+    expected = {"deit_tiny": (192, 3, 768), "deit_small": (384, 6, 1536),
+                "deit_base": (768, 12, 3072)}[name]
+    cfg = BY_NAME[name]
+    assert (cfg.d_model, cfg.n_heads, cfg.d_ff) == expected
+    assert cfg.n_layers == 12 and cfg.n_classes == 1000
+
+
+def test_deit_micro_trains():
+    model = build_model(DEIT_MICRO)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    batch = {"images": jnp.asarray(rng.normal(size=(4, 32, 32, 3))
+                                   .astype(np.float32)),
+             "labels": jnp.asarray([0, 1, 2, 3], jnp.int32)}
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch))(params)
+    assert np.isfinite(float(loss))
+    for g in jax.tree_util.tree_leaves(unwrap(grads)):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_deit_mxint_sim_mode_end_to_end():
+    """The paper's configuration: full bit-accurate MXInt datapath."""
+    import dataclasses as dc
+    from repro.core.mx_types import QuantConfig
+    cfg = dc.replace(DEIT_MICRO, quant=QuantConfig(
+        mode="sim", quantize_nonlinear=True))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(2)
+    imgs = jnp.asarray(rng.normal(size=(2, 32, 32, 3)).astype(np.float32))
+    logits = model.logits(params, imgs)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+    # and it agrees with the float model to within quantization error
+    float_model = build_model(DEIT_MICRO)
+    ref = float_model.logits(params, imgs)
+    cos = float(jnp.vdot(logits.ravel(), ref.ravel()) /
+                (jnp.linalg.norm(logits) * jnp.linalg.norm(ref)))
+    assert cos > 0.95, cos

@@ -1,0 +1,232 @@
+"""Tests for the bit-accurate MXInt non-linear datapaths (paper §III-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MXFormat, NonlinearConfig, quantize, dequantize)
+from repro.core import nonlinear as nl
+from repro.core import luts
+
+FMT = MXFormat(mant_bits=8, block_size=16)
+CFG = NonlinearConfig()
+
+
+def _rand(shape, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)) * scale
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (Fig 3, Eq 2-9)
+# ---------------------------------------------------------------------------
+class TestLayerNorm:
+    def test_close_to_float_reference(self):
+        x = _rand((8, 192))
+        g, b = jnp.ones((192,)), jnp.zeros((192,))
+        got = nl.layernorm_value(x, g, b, CFG, FMT)
+        ref = (x - x.mean(-1, keepdims=True)) / jnp.sqrt(
+            x.var(-1, keepdims=True) + 1e-6)
+        cos = float(jnp.vdot(got.ravel(), ref.ravel()) /
+                    (jnp.linalg.norm(got) * jnp.linalg.norm(ref)))
+        assert cos > 0.999
+
+    def test_exponent_invariance(self):
+        """Paper Eq. 5-7: LayerNorm output must be invariant to the shared
+        exponent lambda — scaling the input by powers of two changes nothing
+        (that is WHY the integer-only datapath is exact w.r.t. lambda)."""
+        x = _rand((4, 64))
+        g, b = jnp.ones((64,)), jnp.zeros((64,))
+        y1 = nl.layernorm_value(x, g, b, CFG, FMT)
+        y2 = nl.layernorm_value(x * 16.0, g, b, CFG, FMT)   # 2^4 scale
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=0, atol=1e-5)
+
+    def test_rms_only_variant(self):
+        x = _rand((4, 64), seed=5)
+        g = jnp.ones((64,))
+        got = nl.layernorm_value(x, g, None, CFG, FMT, rms_only=True)
+        ref = x / jnp.sqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+        assert float(jnp.max(jnp.abs(got - ref))) < 0.2
+
+    def test_constant_row_guard(self):
+        """Var -> 0 corner (paper ignores; we clamp)."""
+        x = jnp.full((1, 64), 2.5)
+        g, b = jnp.ones((64,)), jnp.zeros((64,))
+        y = nl.layernorm_value(x, g, b, CFG, FMT)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_lut_bitwidth_dse_monotone(self):
+        """Fig 4 analogue: more LUT bits -> error weakly decreases, and the
+        paper's knee (>=4 bits OK) is reproduced."""
+        x = _rand((16, 192), seed=7)
+        g, b = jnp.ones((192,)), jnp.zeros((192,))
+        ref = (x - x.mean(-1, keepdims=True)) / jnp.sqrt(
+            x.var(-1, keepdims=True) + 1e-6)
+        errs = {}
+        for bits in (2, 3, 4, 6, 8):
+            cfg = NonlinearConfig(ln_lut_bits=bits)
+            got = nl.layernorm_value(x, g, b, cfg, FMT)
+            errs[bits] = float(jnp.mean(jnp.abs(got - ref)))
+        assert errs[8] <= errs[4] <= errs[2] * 1.05
+        assert errs[4] < 0.05   # knee: 4 bits is already near-lossless
+
+
+# ---------------------------------------------------------------------------
+# GELU (Fig 5-8, Eq 12)
+# ---------------------------------------------------------------------------
+class TestGELU:
+    def test_close_to_exact(self):
+        x = _rand((8, 128))
+        got = nl.gelu_value(x, CFG, FMT)
+        ref = jax.nn.gelu(x, approximate=False)
+        assert float(jnp.max(jnp.abs(got - ref))) < 0.15
+        assert float(jnp.mean(jnp.abs(got - ref))) < 0.03
+
+    def test_relu_tails(self):
+        """|x| >= a must behave as identity / zero (Eq 12)."""
+        cfg = NonlinearConfig()
+        big = jnp.asarray([[4.0, 8.0, 16.0, 5.5] * 4])
+        got = nl.gelu_value(big, cfg, FMT)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(big),
+                                   rtol=2 ** -6)
+        neg = -big
+        got_n = nl.gelu_value(neg, cfg, FMT)
+        np.testing.assert_array_equal(np.asarray(got_n), 0.0)
+
+    def test_exponent_forwarding(self):
+        """Output MXTensor reuses the input block exponents."""
+        x = quantize(_rand((2, 32), seed=3), FMT)
+        y = nl.mxint_gelu(x, CFG)
+        np.testing.assert_array_equal(np.asarray(y.exponent),
+                                      np.asarray(x.exponent))
+
+    def test_domain_dse_fig7(self):
+        """Fig 7 analogue: domain a=3 beats a=1 (truncation error) and is
+        comparable to a=4 for standard-normal-ish inputs."""
+        x = _rand((32, 128), seed=11, scale=1.5)
+        ref = jax.nn.gelu(x, approximate=False)
+        errs = {}
+        for a in (1.0, 2.0, 3.0, 4.0):
+            cfg = NonlinearConfig(gelu_domain=a, gelu_lut_bits=8)
+            errs[a] = float(jnp.mean(jnp.abs(nl.gelu_value(x, cfg, FMT) - ref)))
+        assert errs[3.0] < errs[1.0]
+        assert errs[3.0] < 0.02
+
+    def test_silu_variant(self):
+        x = _rand((8, 128), seed=13, scale=2.0)
+        got = nl.silu_value(x, CFG, FMT)
+        ref = jax.nn.silu(x)
+        assert float(jnp.mean(jnp.abs(got - ref))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Softmax (Eq 14-20)
+# ---------------------------------------------------------------------------
+class TestSoftmax:
+    def test_close_to_float_reference(self):
+        x = _rand((8, 197), seed=17)     # ViT token count, non-divisible
+        got = nl.softmax_value(x, CFG, FMT)
+        ref = jax.nn.softmax(x, -1)
+        assert float(jnp.max(jnp.abs(got - ref))) < 0.05
+
+    def test_rows_sum_to_one(self):
+        x = _rand((16, 64), seed=19, scale=8.0)
+        got = nl.softmax_value(x, CFG, FMT)
+        np.testing.assert_allclose(np.asarray(got.sum(-1)), 1.0, atol=0.02)
+
+    def test_argmax_preserved(self):
+        """What matters for attention + the paper's top-1 metric."""
+        x = _rand((64, 128), seed=23, scale=4.0)
+        got = nl.softmax_value(x, CFG, FMT)
+        ref = jax.nn.softmax(x, -1)
+        agree = float(jnp.mean((jnp.argmax(got, -1) == jnp.argmax(ref, -1))
+                               .astype(jnp.float32)))
+        assert agree > 0.98
+
+    def test_r_bitwidth_dse_fig9(self):
+        """Fig 9 analogue: r-bitwidth error knee at 2 bits."""
+        x = _rand((32, 64), seed=29)
+        ref = jax.nn.softmax(x, -1)
+        errs = {}
+        for rb in (1, 2, 4, 6):
+            cfg = NonlinearConfig(softmax_r_bits=rb)
+            errs[rb] = float(jnp.mean(jnp.abs(
+                nl.softmax_value(x, cfg, FMT) - ref)))
+        assert errs[6] <= errs[2] <= errs[1]
+        assert errs[2] < 0.01
+
+    def test_translation_invariance(self):
+        """softmax(x + c) == softmax(x) survives the datapath (max-subtract
+        happens in the shared-exponent domain)."""
+        x = _rand((4, 64), seed=31)
+        a = nl.softmax_value(x, CFG, FMT)
+        # shift by an exactly-representable power of two to avoid requant noise
+        b = nl.softmax_value(x + 4.0, CFG, FMT)
+        # block exponents shift, so requant truncation differs slightly; the
+        # invariance holds to within one output LSB plus LUT granularity.
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.05)
+
+    def test_exp_datapath_llamacpp_identity(self):
+        """2^n * LUT_pow2(r) == e^x at LUT sample points."""
+        r_bits = 6
+        z = jnp.asarray([-0.5, -1.25, -3.0, 0.0]) * (2 ** r_bits) / (2 ** r_bits)
+        got = nl.exp_datapath(z, r_bits)
+        ref = jnp.exp2(z)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2 ** -r_bits * 0.8)
+
+
+# ---------------------------------------------------------------------------
+# related-work emulations used by the comparison tables
+# ---------------------------------------------------------------------------
+class TestRelatedWorkBaselines:
+    def test_relu6_gelu_is_bad_for_vits(self):
+        """Table III: SDA's ReLU6 loses accuracy on negative inputs."""
+        x = _rand((8, 128), seed=37)
+        ref = jax.nn.gelu(x, approximate=False)
+        sda = nl.relu6_gelu(x)
+        ours = nl.gelu_value(x, CFG, FMT)
+        assert float(jnp.mean(jnp.abs(ours - ref))) < \
+            float(jnp.mean(jnp.abs(sda - ref)))
+
+    def test_fixedpoint_ops_finite(self):
+        x = _rand((4, 64), seed=41)
+        for f in (lambda v: nl.fixedpoint_layernorm(v, None, None),
+                  nl.fixedpoint_gelu, nl.fixedpoint_softmax):
+            assert np.isfinite(np.asarray(f(x))).all()
+
+
+# ---------------------------------------------------------------------------
+# LUT builders
+# ---------------------------------------------------------------------------
+class TestLUTs:
+    def test_rsqrt_table_values(self):
+        lut = np.asarray(luts.rsqrt_lut(6))
+        assert lut.shape == (64,)
+        u = 0.5 + 1.5 * (np.arange(64) + 0.5) / 64
+        np.testing.assert_allclose(lut, 1 / np.sqrt(u), rtol=1e-6)
+
+    def test_pow2_table_truncation_keeps_max_exact(self):
+        lut = np.asarray(luts.pow2_lut(2))
+        assert lut[0] == 1.0          # r = 0 -> exactly 1 (softmax max elem)
+        assert lut.shape == (4,)
+
+    @settings(max_examples=25, deadline=None)
+    @given(bits=st.integers(min_value=1, max_value=8),
+           seed=st.integers(min_value=0, max_value=999))
+    def test_property_pow2_lut_error_bound(self, bits, seed):
+        """LUT_pow2 truncation error < 2^(1/2^bits) - 1 relative."""
+        rng = np.random.default_rng(seed)
+        r = jnp.asarray(rng.uniform(0, 1, size=64).astype(np.float32))
+        got = np.asarray(jnp.take(luts.pow2_lut(bits),
+                                  luts.pow2_index(r, bits)))
+        ref = np.exp2(np.asarray(r))
+        rel = np.abs(got - ref) / ref
+        assert np.all(rel <= 2 ** (1 / 2 ** bits) - 1 + 1e-6)
+
+    def test_table_bytes_area_proxy(self):
+        # paper Table VI: vanilla softmax LUT 16 entry-bits vs ours 2 ->
+        # 2^14 x table size reduction
+        assert luts.table_bytes(2 ** 16) / luts.table_bytes(2 ** 2) == 2 ** 14

@@ -1,0 +1,249 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles.
+
+Every kernel is swept over shapes and dtypes and compared against ref.py.
+LayerNorm / softmax / GELU kernels must match their oracles bit-for-bit
+(identical op graph per row); matmul and flash attention allow accumulation-
+order tolerance.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MXFormat, quantize
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mxint_gelu import mxint_gelu as gelu_kernel
+from repro.kernels.mxint_layernorm import mxint_layernorm as ln_kernel
+from repro.kernels.mxint_matmul import mxint_matmul as mm_kernel
+from repro.kernels.mxint_softmax import mxint_softmax as sm_kernel
+from repro.kernels import ops
+
+
+def _rand(shape, seed=0, scale=1.0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale,
+                       dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# mxint_matmul
+# ---------------------------------------------------------------------------
+class TestMXIntMatmul:
+    @pytest.mark.parametrize("m,k,n", [(8, 128, 128), (16, 256, 384),
+                                       (128, 512, 128), (32, 1024, 256)])
+    @pytest.mark.parametrize("w_block", [128, 256])
+    def test_shape_sweep_weight_only(self, m, k, n, w_block):
+        if k % w_block and w_block % k:
+            pytest.skip("block/tile mismatch")
+        x = _rand((m, k), seed=m + k, scale=0.5)
+        w = _rand((k, n), seed=n, scale=0.1)
+        wq = quantize(w, MXFormat(8, w_block), axis=0)
+        got = mm_kernel(x, wq.mantissa, wq.exponent, w_block=wq.block_size,
+                        bm=8, bn=128, bk=128, interpret=True)
+        want = ref.mxint_matmul_ref(x, wq.mantissa, wq.exponent,
+                                    w_block=wq.block_size)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        x = _rand((16, 256), seed=1, dtype=dtype)
+        w = _rand((256, 128), seed=2, scale=0.1)
+        wq = quantize(w, MXFormat(6, 256), axis=0)
+        got = mm_kernel(x, wq.mantissa, wq.exponent, w_block=256,
+                        bm=16, bn=128, bk=256, interpret=True)
+        want = ref.mxint_matmul_ref(x, wq.mantissa, wq.exponent, w_block=256)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_quantized_activation_path(self):
+        """Fig 2b full-integer datapath: kernel == oracle with act QDQ."""
+        x = _rand((32, 512), seed=3, scale=2.0)
+        w = _rand((512, 128), seed=4, scale=0.05)
+        wq = quantize(w, MXFormat(6, 256), axis=0)
+        got = mm_kernel(x, wq.mantissa, wq.exponent, w_block=256,
+                        quantize_act=True, act_block=16, act_mant_bits=8,
+                        bm=32, bn=128, bk=256, interpret=True)
+        want = ref.mxint_matmul_ref(x, wq.mantissa, wq.exponent, w_block=256,
+                                    quantize_act=True, act_block=16,
+                                    act_mant_bits=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_small_wblock_multiple_tiles(self):
+        """bk < w_block: several K tiles share one exponent row."""
+        x = _rand((8, 512), seed=5)
+        w = _rand((512, 128), seed=6, scale=0.1)
+        wq = quantize(w, MXFormat(8, 512), axis=0)
+        got = mm_kernel(x, wq.mantissa, wq.exponent, w_block=512,
+                        bm=8, bn=128, bk=128, interpret=True)
+        want = ref.mxint_matmul_ref(x, wq.mantissa, wq.exponent, w_block=512)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mxint_layernorm
+# ---------------------------------------------------------------------------
+class TestMXIntLayerNorm:
+    @pytest.mark.parametrize("rows,d", [(8, 128), (32, 192), (64, 768),
+                                        (128, 1024)])
+    @pytest.mark.parametrize("rms_only", [False, True])
+    def test_bitexact_vs_oracle(self, rows, d, rms_only):
+        x = _rand((rows, d), seed=rows + d, scale=3.0)
+        g = _rand((d,), seed=1, scale=0.5) + 1.0
+        b = _rand((d,), seed=2, scale=0.1)
+        got = ln_kernel(x, g, b, rms_only=rms_only,
+                        block_rows=min(rows, 32), interpret=True)
+        want = ref.mxint_layernorm_ref(x, g, b, rms_only=rms_only)
+        # 1-ulp differences allowed: XLA picks different reduction trees for
+        # the (block_rows, d) kernel tile vs the full-array oracle.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-6, atol=3e-6)
+
+    @pytest.mark.parametrize("lut_bits", [3, 4, 5, 8])
+    def test_lut_bits_sweep(self, lut_bits):
+        x = _rand((16, 256), seed=9, scale=2.0)
+        g, b = jnp.ones((256,)), jnp.zeros((256,))
+        got = ln_kernel(x, g, b, lut_bits=lut_bits, block_rows=16,
+                        interpret=True)
+        want = ref.mxint_layernorm_ref(x, g, b, lut_bits=lut_bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-6, atol=3e-6)
+
+    def test_vs_float_layernorm(self):
+        x = _rand((32, 768), seed=10, scale=2.0)
+        g, b = jnp.ones((768,)), jnp.zeros((768,))
+        got = np.asarray(ln_kernel(x, g, b, block_rows=32, interpret=True))
+        mean = np.asarray(x).mean(-1, keepdims=True)
+        ref_ln = (np.asarray(x) - mean) / np.sqrt(
+            np.asarray(x).var(-1, keepdims=True) + 1e-6)
+        cos = np.vdot(got, ref_ln) / (np.linalg.norm(got) *
+                                      np.linalg.norm(ref_ln))
+        assert cos > 0.999
+
+
+# ---------------------------------------------------------------------------
+# mxint_softmax
+# ---------------------------------------------------------------------------
+class TestMXIntSoftmax:
+    @pytest.mark.parametrize("rows,n", [(8, 128), (32, 197 - 5), (64, 1024)])
+    @pytest.mark.parametrize("r_bits", [2, 4])
+    def test_bitexact_vs_oracle(self, rows, n, r_bits):
+        n = n - (n % 16) if n % 16 else n   # kernel wants divisible rows
+        x = _rand((rows, n), seed=rows + n, scale=4.0)
+        got = sm_kernel(x, r_bits=r_bits, block_rows=min(rows, 32),
+                        interpret=True)
+        want = ref.mxint_softmax_ref(x, r_bits=r_bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-6, atol=1e-7)
+
+    def test_rows_sum_to_one(self):
+        x = _rand((64, 256), seed=12, scale=6.0)
+        got = np.asarray(sm_kernel(x, block_rows=64, interpret=True))
+        np.testing.assert_allclose(got.sum(-1), 1.0, atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# mxint_gelu
+# ---------------------------------------------------------------------------
+class TestMXIntGELU:
+    @pytest.mark.parametrize("rows,d", [(8, 128), (32, 768), (128, 3072)])
+    @pytest.mark.parametrize("fn", ["gelu", "silu"])
+    def test_bitexact_vs_oracle(self, rows, d, fn):
+        x = _rand((rows, d), seed=rows + d, scale=3.0)
+        got = gelu_kernel(x, fn=fn, block_rows=min(rows, 32), interpret=True)
+        want = ref.mxint_gelu_ref(x, fn=fn)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("lut_bits,domain", [(4, 3.0), (5, 3.0),
+                                                 (5, 4.0), (8, 2.0)])
+    def test_dse_sweep(self, lut_bits, domain):
+        x = _rand((16, 256), seed=14, scale=2.0)
+        got = gelu_kernel(x, lut_bits=lut_bits, domain=domain, block_rows=16,
+                          interpret=True)
+        want = ref.mxint_gelu_ref(x, lut_bits=lut_bits, domain=domain)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,sk", [(128, 128), (256, 256), (128, 512)])
+    def test_float_vs_exact(self, sq, sk):
+        q = _rand((2, sq, 128), seed=sq, scale=0.5)
+        k = _rand((2, sk, 128), seed=sk + 1, scale=0.5)
+        v = _rand((2, sk, 128), seed=sk + 2)
+        got = flash_attention(q, k, v, causal=True, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_mxint_exp_mode_close_to_oracle(self):
+        q = _rand((2, 128, 128), seed=20, scale=0.5)
+        k = _rand((2, 128, 128), seed=21, scale=0.5)
+        v = _rand((2, 128, 128), seed=22)
+        got = flash_attention(q, k, v, causal=True, exp_mode="mxint",
+                              r_bits=2, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, exp_mode="mxint",
+                                 r_bits=2)
+        # blocked vs row-at-once accumulation differ (exact alpha rescale);
+        # values agree to LUT granularity
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0.1, atol=0.05)
+
+    def test_sliding_window(self):
+        q = _rand((1, 256, 128), seed=30, scale=0.5)
+        k = _rand((1, 256, 128), seed=31, scale=0.5)
+        v = _rand((1, 256, 128), seed=32)
+        got = flash_attention(q, k, v, causal=True, window=64, interpret=True)
+        want = ref.attention_ref(q, k, v, causal=True, window=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_mxint_attention_close_to_float(self):
+        """End check: the paper's softmax datapath keeps attention faithful."""
+        q = _rand((4, 128, 128), seed=40, scale=0.3)
+        k = _rand((4, 128, 128), seed=41, scale=0.3)
+        v = _rand((4, 128, 128), seed=42)
+        a = flash_attention(q, k, v, causal=True, exp_mode="mxint",
+                            interpret=True)
+        b = flash_attention(q, k, v, causal=True, exp_mode="float",
+                            interpret=True)
+        err = float(jnp.max(jnp.abs(a - b))) / float(jnp.max(jnp.abs(b)))
+        assert err < 0.15
+
+
+# ---------------------------------------------------------------------------
+# ops wrappers
+# ---------------------------------------------------------------------------
+class TestOpsWrappers:
+    def test_linear_nd(self):
+        x = _rand((2, 3, 256), seed=50)
+        w = _rand((256, 128), seed=51, scale=0.1)
+        wq = quantize(w, MXFormat(8, 256), axis=0)
+        y = ops.mxint_linear(x, wq.mantissa, wq.exponent, w_block=256)
+        assert y.shape == (2, 3, 128)
+        want = x.reshape(-1, 256) @ np.asarray(
+            ref.mxint_matmul_ref(jnp.eye(256), wq.mantissa, wq.exponent,
+                                 w_block=256))
+        np.testing.assert_allclose(np.asarray(y).reshape(-1, 128),
+                                   np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_odd_rows_padding(self):
+        x = _rand((5, 7, 192), seed=52, scale=2.0)
+        y = ops.mxint_layernorm_op(x, jnp.ones((192,)), jnp.zeros((192,)))
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_attention_op_gqa_shapes(self):
+        q = _rand((2, 4, 64, 64), seed=53)
+        k = _rand((2, 4, 64, 64), seed=54)
+        v = _rand((2, 4, 64, 64), seed=55)
+        o = ops.attention_op(q, k, v, causal=True)
+        assert o.shape == q.shape

@@ -3,15 +3,21 @@
 interpret=True timings are NOT TPU performance — they validate that the
 kernels run and give a cost sanity check; the TPU performance story is the
 roofline analysis (benchmarks/roofline.py).
+
+Also reports the end-to-end DeiT execution-mode comparison: the same
+forward pass in mode='off' (float), mode='sim' (XLA emulation of the MXInt
+datapaths) and mode='kernel' (packed planes through the Pallas wrappers).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timer
-from repro.core import MXFormat, quantize
+from repro.core import MXFormat, QuantConfig, quantize
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mxint_gelu import mxint_gelu
@@ -57,6 +63,46 @@ def run():
                                       exp_mode="mxint"))
     rows.append(("kernel/flash_attention_mxint", round(t, 1),
                  "pallas, Eq14-19 exp datapath"))
+
+    rows.extend(deit_mode_rows())
+    return rows
+
+
+def deit_mode_rows(archs=("deit_tiny", "deit_small"), batch: int = 1,
+                   n_layers: int = 2):
+    """off / sim / kernel wall-clock of a DeiT forward (CPU interpret).
+
+    ``n_layers`` is truncated (the per-layer cost is uniform) so the CPU
+    bench stays minutes-scale; relative mode cost is what matters here —
+    absolute TPU numbers come from the roofline.
+    """
+    from repro.configs.deit import BY_NAME
+    from repro.models import build_model
+    from repro.serving.engine import pack_params_mxint
+
+    modes = {
+        "off": (QuantConfig(mode="off"), False),
+        "sim": (QuantConfig(mode="sim", quantize_nonlinear=True), False),
+        "kernel": (QuantConfig(mode="kernel", quantize_nonlinear=True),
+                   True),
+    }
+    rows = []
+    rng = np.random.default_rng(0)
+    for arch in archs:
+        cfg = dataclasses.replace(BY_NAME[arch], n_layers=n_layers)
+        imgs = jnp.asarray(rng.normal(
+            size=(batch, cfg.image_size, cfg.image_size, 3))
+            .astype(np.float32))
+        params = build_model(cfg).init(jax.random.key(0))
+        for mode, (qcfg, pack) in modes.items():
+            model = build_model(dataclasses.replace(cfg, quant=qcfg))
+            p = pack_params_mxint(params, qcfg.weight_fmt) if pack else params
+            fwd = jax.jit(model.logits)
+            t = timer(lambda: fwd(p, imgs), repeats=3)
+            rows.append((f"kernel/{arch}_L{n_layers}_forward_{mode}",
+                         round(t, 1),
+                         "pallas interpret" if mode == "kernel"
+                         else "xla"))
     return rows
 
 

@@ -145,7 +145,15 @@ class QuantConfig:
       'sim'    — bit-accurate integer emulation of the paper's datapaths
                  (the correctness oracle).
       'packed' — weights stored as int8 mantissa planes + int8 exponents;
-                 dequant fused into the consuming kernel (serving path).
+                 dequant fused into the consuming XLA op (serving path).
+      'kernel' — packed planes fed straight into the Pallas kernels
+                 (repro.kernels.ops): mxint_linear consumes the int8
+                 mantissa/exponent planes with no host-side dequantize, and
+                 LayerNorm/GELU/Softmax/attention run the in-kernel MXInt
+                 datapaths.  Numerically identical to 'sim' (same LUTs and
+                 integer stages); inference-only.  MXInt formats only:
+                 ``emulate`` / ``nl_emulate`` baselines are XLA emulations
+                 with no kernel counterpart.
     """
 
     mode: str = "off"
@@ -161,10 +169,14 @@ class QuantConfig:
                                        # — Tables II-IV baselines
 
     def __post_init__(self):
-        if self.mode not in ("off", "fake", "sim", "packed"):
+        if self.mode not in ("off", "fake", "sim", "packed", "kernel"):
             raise ValueError(f"unknown quant mode {self.mode!r}")
         if self.emulate not in (None, "int", "fp8"):
             raise ValueError(f"unknown emulate {self.emulate!r}")
+        if self.mode == "kernel" and (self.emulate is not None or
+                                      self.nl_emulate is not None):
+            raise ValueError("mode='kernel' runs the MXInt Pallas datapaths; "
+                             "emulate/nl_emulate baselines are XLA-only")
         if self.quantize_nonlinear and self.nonlinear is None:
             object.__setattr__(self, "nonlinear", NonlinearConfig())
 

@@ -56,11 +56,24 @@ def requantize_rows(m: jnp.ndarray, e: jnp.ndarray):
     """Align all blocks of each row to the row-max exponent (Eq. 3)."""
     e_max = jnp.max(e, axis=-1, keepdims=True)
     shift = jnp.minimum(e_max - e, 31)
-    # arithmetic right shift on integer-valued f32 mantissas:
-    # floor-divide matches >> for the int32 the hardware holds.
-    mi = jnp.floor_divide(m.astype(jnp.int32),
-                          (1 << shift)[..., None].astype(jnp.int32))
-    return mi.astype(jnp.float32), e_max
+    # arithmetic right shift on integer-valued f32 mantissas: floor of the
+    # exact power-of-two scale matches >> for the int32 the hardware holds
+    # (incl. negatives, floor -> -inf), and unlike `1 << shift` it cannot
+    # overflow at the shift=31 saturation point (hit when masked -inf
+    # scores share a row with real scores).
+    mi = jnp.floor(m * jnp.exp2(-shift.astype(jnp.float32))[..., None])
+    return mi, e_max
+
+
+def requantize_to_grid(y: jnp.ndarray, block: int, mant_bits: int):
+    """Snap a (rows, d) tile onto the MXInt act grid (quantize-dequantize).
+
+    The shared epilogue of the LayerNorm and softmax kernels: the 'sim'
+    datapath quantizes each op's output back to act_fmt before the next op
+    consumes it.
+    """
+    m, e = block_quantize_rows(y, block, mant_bits)
+    return (m * jnp.exp2(e.astype(jnp.float32))[..., None]).reshape(y.shape)
 
 
 def _rsqrt_lut_stage(var: jnp.ndarray, table: jnp.ndarray, bits: int):
@@ -78,7 +91,7 @@ def _rsqrt_lut_stage(var: jnp.ndarray, table: jnp.ndarray, bits: int):
 
 def _mxint_layernorm_kernel(x_ref, g_ref, b_ref, lut_ref, o_ref, *,
                             act_block: int, mant_bits: int, lut_bits: int,
-                            rms_only: bool):
+                            rms_only: bool, quantize_out: bool):
     x = x_ref[...].astype(jnp.float32)                 # (br, d)
     m, e = block_quantize_rows(x, act_block, mant_bits)
     mf, _ = requantize_rows(m, e)                      # lambda cancels
@@ -93,15 +106,18 @@ def _mxint_layernorm_kernel(x_ref, g_ref, b_ref, lut_ref, o_ref, *,
     y = y * g_ref[...][None, :]
     if not rms_only:
         y = y + b_ref[...][None, :]
+    if quantize_out:
+        y = requantize_to_grid(y, act_block, mant_bits)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "act_block", "mant_bits", "lut_bits", "rms_only", "block_rows",
-    "interpret"))
+    "act_block", "mant_bits", "lut_bits", "rms_only", "quantize_out",
+    "block_rows", "interpret"))
 def mxint_layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, *,
                     act_block: int = 16, mant_bits: int = 8,
                     lut_bits: int = 5, rms_only: bool = False,
+                    quantize_out: bool = False,
                     block_rows: int = 256, interpret: bool = True):
     """(rows, d) MXInt LayerNorm over the last axis."""
     rows, d = x.shape
@@ -113,7 +129,7 @@ def mxint_layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, *,
 
     kernel = functools.partial(
         _mxint_layernorm_kernel, act_block=act_block, mant_bits=mant_bits,
-        lut_bits=lut_bits, rms_only=rms_only)
+        lut_bits=lut_bits, rms_only=rms_only, quantize_out=quantize_out)
 
     return pl.pallas_call(
         kernel,

@@ -23,7 +23,8 @@ from jax.experimental import pallas as pl
 
 from repro.core import luts
 from repro.kernels.mxint_layernorm import (block_quantize_rows, lut_lookup,
-                                           requantize_rows)
+                                           requantize_rows,
+                                           requantize_to_grid)
 
 _LOG2E = 1.4426950408889634
 
@@ -39,7 +40,7 @@ def exp2_datapath(z: jnp.ndarray, table: jnp.ndarray, r_bits: int):
 
 
 def _mxint_softmax_kernel(x_ref, lut_ref, o_ref, *, act_block: int,
-                          mant_bits: int, r_bits: int):
+                          mant_bits: int, r_bits: int, quantize_out: bool):
     x = x_ref[...].astype(jnp.float32)                  # (br, n)
     m, e = block_quantize_rows(x, act_block, mant_bits)
     mf, lam = requantize_rows(m, e)
@@ -50,13 +51,19 @@ def _mxint_softmax_kernel(x_ref, lut_ref, o_ref, *, act_block: int,
     s = jnp.sum(p, axis=-1, keepdims=True)
     s_m, s_e = jnp.frexp(s)                             # LZC + shift in HW
     y = (p / s_m) * jnp.exp2(-s_e.astype(jnp.float32))
+    if quantize_out:
+        # probabilities leave on the MXInt act grid (the 'sim' datapath's
+        # final quantize before the p @ V matmul)
+        y = requantize_to_grid(y, act_block, mant_bits)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "act_block", "mant_bits", "r_bits", "block_rows", "interpret"))
+    "act_block", "mant_bits", "r_bits", "quantize_out", "block_rows",
+    "interpret"))
 def mxint_softmax(x: jnp.ndarray, *, act_block: int = 16, mant_bits: int = 8,
-                  r_bits: int = 2, block_rows: int = 256,
+                  r_bits: int = 2, quantize_out: bool = False,
+                  block_rows: int = 256,
                   interpret: bool = True) -> jnp.ndarray:
     """Row softmax over the last axis of a 2-D array via the MXInt datapath."""
     rows, n = x.shape
@@ -67,7 +74,8 @@ def mxint_softmax(x: jnp.ndarray, *, act_block: int = 16, mant_bits: int = 8,
     lut = luts.pow2_lut(r_bits)
 
     kernel = functools.partial(_mxint_softmax_kernel, act_block=act_block,
-                               mant_bits=mant_bits, r_bits=r_bits)
+                               mant_bits=mant_bits, r_bits=r_bits,
+                               quantize_out=quantize_out)
     return pl.pallas_call(
         kernel,
         grid=(rows // br,),

@@ -4,6 +4,14 @@ These handle shape plumbing (leading-dim flattening, row padding to tile
 multiples), backend selection (Pallas compiled on TPU, interpret=True on
 CPU, pure-XLA fallback for odd shapes) and expose the kernels under the
 names the model zoo consumes.
+
+This module is the dispatch layer behind ``QuantConfig(mode='kernel')``:
+`models/layers.py` and `models/attention.py` call these wrappers, and each
+wrapper feeds the packed int8 mantissa/exponent planes (weights) or the
+raw activations straight into the corresponding Pallas kernel.  Block
+sizes are resolved exactly like ``repro.core.quantize`` resolves them
+(clamp to the dim, largest divisor), so the kernel datapath is
+numerically identical to the ``mode='sim'`` oracle.
 """
 from __future__ import annotations
 
@@ -12,12 +20,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import _resolve_block
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mxint_gelu import mxint_gelu as _gelu_kernel
 from repro.kernels.mxint_layernorm import mxint_layernorm as _ln_kernel
 from repro.kernels.mxint_matmul import mxint_matmul as _mm_kernel
 from repro.kernels.mxint_softmax import mxint_softmax as _sm_kernel
+
+_NEG_INF = -2.0e38     # matches models/attention.py masking
 
 
 def on_tpu() -> bool:
@@ -53,19 +64,42 @@ def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
                  bias: jnp.ndarray | None = None, *, w_block: int,
                  quantize_act: bool = False, act_block: int = 16,
                  act_mant_bits: int = 8) -> jnp.ndarray:
-    """y = x @ W_mx (+ bias) for arbitrary leading dims of x."""
+    """y = x @ W_mx (+ bias) for arbitrary leading dims of x.
+
+    The packed planes go into the Pallas kernel untouched — HBM traffic is
+    the quantized bytes (the paper's memory win).  In interpret mode
+    (CPU/CI) rows are padded to the sublane multiple and output columns to
+    the lane multiple so ANY model shape runs through the kernel; the K
+    contraction stays a single tile, which keeps the accumulation order
+    identical to the XLA einsum of the 'sim' oracle (bit-exact parity).
+    On TPU the MXU-aligned multi-tile path is used, falling back to the
+    jnp oracle for shapes the compiled kernel cannot tile.
+    """
     x2, lead = _flatten_rows(x)
     M, K = x2.shape
     N = w_mant.shape[1]
-    tiled = (M % 8 == 0 and K % 128 == 0 and N % 128 == 0)
-    if tiled:
+    act_block = _resolve_block(K, act_block)
+    interp = _interpret()
+    if interp:
+        x2p, rows = _pad_rows(x2, 8)
+        npad = (-N) % 128
+        wm, we = w_mant, w_exp
+        if npad:
+            wm = jnp.pad(wm, ((0, 0), (0, npad)))
+            we = jnp.pad(we, ((0, 0), (0, npad)))
+        y = _mm_kernel(x2p, wm, we, w_block=w_block,
+                       act_block=act_block, act_mant_bits=act_mant_bits,
+                       quantize_act=quantize_act,
+                       bm=_pick_block_rows(x2p.shape[0], 128),
+                       bn=128, bk=K, interpret=True)[:rows, :N]
+    elif M % 8 == 0 and K % 128 == 0 and N % 128 == 0:
         bm = _pick_block_rows(M, 128)
         bk = 512 if K % 512 == 0 else 128
         bn = 128
         y = _mm_kernel(x2, w_mant, w_exp, w_block=w_block,
                        act_block=act_block, act_mant_bits=act_mant_bits,
                        quantize_act=quantize_act, bm=bm, bn=bn, bk=bk,
-                       interpret=_interpret())
+                       interpret=False)
     else:
         y = ref.mxint_matmul_ref(x2, w_mant, w_exp, w_block=w_block,
                                  act_block=act_block,
@@ -79,23 +113,29 @@ def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
 def mxint_layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray,
                        beta: jnp.ndarray | None = None, *,
                        act_block: int = 16, mant_bits: int = 8,
-                       lut_bits: int = 5, rms_only: bool = False):
+                       lut_bits: int = 5, rms_only: bool = False,
+                       quantize_out: bool = False):
     x2, lead = _flatten_rows(x)
     beta_arr = beta if beta is not None else jnp.zeros_like(gamma)
     x2p, rows = _pad_rows(x2, 8)
-    y = _ln_kernel(x2p, gamma, beta_arr, act_block=act_block,
+    y = _ln_kernel(x2p, gamma, beta_arr,
+                   act_block=_resolve_block(x.shape[-1], act_block),
                    mant_bits=mant_bits, lut_bits=lut_bits, rms_only=rms_only,
+                   quantize_out=quantize_out,
                    block_rows=_pick_block_rows(x2p.shape[0]),
                    interpret=_interpret())
     return y[:rows].reshape(*lead, x.shape[-1])
 
 
 def mxint_softmax_op(x: jnp.ndarray, *, act_block: int = 16,
-                     mant_bits: int = 8, r_bits: int = 2) -> jnp.ndarray:
+                     mant_bits: int = 8, r_bits: int = 2,
+                     quantize_out: bool = False) -> jnp.ndarray:
     x2, lead = _flatten_rows(x)
     x2p, rows = _pad_rows(x2, 8)
-    y = _sm_kernel(x2p, act_block=act_block, mant_bits=mant_bits,
-                   r_bits=r_bits, block_rows=_pick_block_rows(x2p.shape[0]),
+    y = _sm_kernel(x2p, act_block=_resolve_block(x.shape[-1], act_block),
+                   mant_bits=mant_bits, r_bits=r_bits,
+                   quantize_out=quantize_out,
+                   block_rows=_pick_block_rows(x2p.shape[0]),
                    interpret=_interpret())
     return y[:rows].reshape(x.shape)
 
@@ -105,19 +145,93 @@ def mxint_gelu_op(x: jnp.ndarray, *, fn: str = "gelu", act_block: int = 16,
                   domain: float = 3.0) -> jnp.ndarray:
     x2, lead = _flatten_rows(x)
     x2p, rows = _pad_rows(x2, 8)
-    y = _gelu_kernel(x2p, act_block=act_block, mant_bits=mant_bits,
+    y = _gelu_kernel(x2p, act_block=_resolve_block(x.shape[-1], act_block),
+                     mant_bits=mant_bits,
                      lut_bits=lut_bits, domain=domain, fn=fn,
                      block_rows=_pick_block_rows(x2p.shape[0]),
                      interpret=_interpret())
     return y[:rows].reshape(x.shape)
 
 
+def _paper_softmax_attention(qf, kf, vf, *, causal: bool, window: int,
+                             scale: float, act_block: int, mant_bits: int,
+                             r_bits: int, groups: int = 1) -> jnp.ndarray:
+    """Whole-row attention with the Pallas MXInt softmax kernel.
+
+    The paper's FPGA design streams entire score rows through the softmax
+    datapath (no online rescale), which is also what the 'sim' oracle
+    emulates — so this path is the bit-exact kernel reading of the ViT
+    attention: score matmul on the MXU, Eq. 14-20 softmax in the Pallas
+    kernel (including the final quantize of the probabilities), p @ V on
+    the MXU.
+
+    GQA: ``groups`` query heads share each KV head.  qf packs them as
+    (b*kv_heads, groups*sq, d) — group-major rows — so K/V are contracted
+    once per KV head with NO per-query-head broadcast copy; the query
+    position of row i is ``i % sq``.
+    """
+    bh, gsq, d = qf.shape
+    sq = gsq // groups
+    sk = kf.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", qf.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    q_pos = (jnp.arange(gsq) % sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((gsq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    masked = bool(causal or window > 0)
+    if masked:
+        s = jnp.where(mask[None], s, _NEG_INF)
+    p = mxint_softmax_op(s, act_block=act_block, mant_bits=mant_bits,
+                         r_bits=r_bits, quantize_out=True)
+    if masked:
+        p = jnp.where(mask[None], p, 0.0)
+    o = jnp.einsum("bqk,bkd->bqd", p, vf.astype(jnp.float32))
+    return o.astype(qf.dtype)
+
+
 def attention_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                  causal: bool = True, window: int = 0,
-                 exp_mode: str = "float", r_bits: int = 2) -> jnp.ndarray:
-    """(B, H, S, D) attention through the flash kernel."""
+                 exp_mode: str = "float", r_bits: int = 2,
+                 softmax_variant: str = "online",
+                 act_block: int = 16, mant_bits: int = 8) -> jnp.ndarray:
+    """(B, H, S, D) attention through the Pallas kernels.
+
+    softmax_variant:
+      'online' — blocked flash kernel (online softmax); ``exp_mode='mxint'``
+                 runs the Eq. 14-19 exp LUT inside the flash kernel.  The
+                 long-sequence LM path.
+      'paper'  — whole-row MXInt softmax through the Pallas softmax kernel
+                 (quantized scores AND quantized probabilities, Eq. 14-20
+                 exactly as the FPGA streams rows).  The ViT / encoder path;
+                 bit-identical to the 'sim' oracle.
+
+    GQA: k/v may carry fewer heads than q (q heads must be a multiple,
+    laid out KV-major: q[:, i] attends k[:, i // groups]).  The 'paper'
+    variant folds the group dim into query rows — K/V are never copied
+    per query head; the flash path broadcasts (the flash kernel wants
+    matched head counts).
+    """
     b, h, sq, d = q.shape
+    hkv = k.shape[1]
     sk = k.shape[2]
+    groups = h // hkv
+    scale = d ** -0.5
+    if softmax_variant == "paper":
+        o = _paper_softmax_attention(
+            q.reshape(b * hkv, groups * sq, d),
+            k.reshape(b * hkv, sk, d), v.reshape(b * hkv, sk, d),
+            causal=causal, window=window, scale=scale, act_block=act_block,
+            mant_bits=mant_bits, r_bits=r_bits, groups=groups)
+        return o.reshape(b, h, sq, d)
+    if groups > 1:
+        k = jnp.broadcast_to(k[:, :, None], (b, hkv, groups, sk, d)
+                             ).reshape(b, h, sk, d)
+        v = jnp.broadcast_to(v[:, :, None], (b, hkv, groups, sk, d)
+                             ).reshape(b, h, sk, d)
     qf = q.reshape(b * h, sq, d)
     kf = k.reshape(b * h, sk, d)
     vf = v.reshape(b * h, sk, d)

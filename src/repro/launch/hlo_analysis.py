@@ -168,6 +168,9 @@ def roofline_from_compiled(compiled, *, model_flops: Optional[float] = None,
     and is kept only as a cross-check in xla_flops/xla_bytes."""
     from repro.launch.hlo_cost import parse_program_costs
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        # older jax returns a one-entry list of per-device dicts
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     pc = parse_program_costs(hlo)
     flops = pc.flops

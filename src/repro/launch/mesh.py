@@ -2,28 +2,58 @@
 
 Importing this module never touches jax device state; meshes are built by
 FUNCTIONS so the dry-run controls XLA_FLAGS before first jax init.
+
+``jax.sharding.AxisType`` only exists from jax 0.5; on older jax the
+explicit-sharding axis types simply don't apply, so the shim below passes
+``axis_types`` only when the running jax supports it.
 """
 from __future__ import annotations
 
 import jax
 
 
+def _mesh_kwargs(n_axes: int) -> dict:
+    """axis_types kwarg when this jax has AxisType; empty dict otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def _make_mesh(shape, axes):
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
+    # very old jax: build the device mesh by hand
+    from jax.experimental import mesh_utils
+    devices = mesh_utils.create_device_mesh(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (TPU v5e pod slice); 2 pods = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CI-scale integration tests (needs forced host devices
     >= prod(shape))."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh (plain CPU runs)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    ``jax.set_mesh`` is the modern entry point; on older jax the Mesh
+    object itself is the (legacy thread-resources) context manager.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh

@@ -9,7 +9,11 @@ Three execution paths, all numerically consistent:
                algebra in pure XLA); used whenever the score matrix would
                not fit (32k prefill, 4k training).  This is what the
                multi-pod dry-run lowers.
-  * kernel   — the Pallas flash kernel (repro.kernels) on real TPU backends.
+  * kernel   — QuantConfig(mode='kernel') routes through
+               repro.kernels.ops.attention_op: the whole-row Pallas MXInt
+               softmax ('paper' variant, bit-identical to the sim direct
+               path) when quantize_nonlinear is set, the blocked flash
+               kernel otherwise.
 
 KV caches:
   full ring: (b, kv_heads, S_max, hd) with dynamic_update_slice writes.
@@ -297,6 +301,26 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
             new_cache = {"k": ck, "v": cv}
             o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
                                      window=window, chunk=chunk, scale=scale)
+    elif quant.mode == "kernel":
+        # Pallas route (kernel mode): heads-major layout into attention_op.
+        # 'paper' variant = whole-row MXInt softmax in the Pallas kernel
+        # (bit-identical to the 'sim' direct path); float flash otherwise.
+        from repro.kernels import ops as kops
+        S = k.shape[1]
+        qh = jnp.einsum("bskgd->bkgsd", q).reshape(b, kvh * g, s, hd)
+        kh = jnp.einsum("bSkd->bkSd", k)          # (b, kvh, S, hd), no copy
+        vh = jnp.einsum("bSkd->bkSd", v)
+        if quant.quantize_nonlinear and "softmax" in quant.nl_ops:
+            o = kops.attention_op(
+                qh, kh, vh, causal=causal, window=window,
+                softmax_variant="paper",
+                act_block=quant.act_fmt.block_size,
+                mant_bits=quant.act_fmt.mant_bits,
+                r_bits=quant.nonlinear.softmax_r_bits)
+        else:
+            o = kops.attention_op(qh, kh, vh, causal=causal, window=window,
+                                  exp_mode="float")
+        o = jnp.einsum("bkgsd->bskgd", o.reshape(b, kvh, g, s, hd))
     else:
         kv_len = k.shape[1]
         use_direct = (quant.enabled and quant.quantize_nonlinear and

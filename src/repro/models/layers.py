@@ -11,7 +11,18 @@ Each primitive dispatches on QuantConfig.mode:
              to the integer datapath: products of <=8-bit mantissas are
              exact in f32, and the TPU accumulator is lossless).
   'packed' — weights arrive as MXTensor leaves (int8 planes); dequant is
-             fused into the consuming op.  Serving path.
+             fused into the consuming XLA op.  Serving path.
+  'kernel' — the Pallas execution path (repro.kernels.ops): linears feed
+             the packed int8 mantissa/exponent planes straight into
+             `mxint_linear` (no host-side dequantize — HBM traffic is the
+             quantized bytes), and, when ``quantize_nonlinear`` is set,
+             LayerNorm / RMSNorm / GELU / SiLU / softmax run the in-kernel
+             MXInt datapaths (`mxint_layernorm_op` / `mxint_gelu_op` /
+             `mxint_softmax_op`).  Numerically identical to 'sim' — same
+             LUTs, same integer stages, same output quantization — so the
+             oracle doubles as the parity check.  Inference-only (the
+             Pallas calls carry no VJP); weights that are not already
+             MXTensor leaves are packed on the fly.
 """
 from __future__ import annotations
 
@@ -21,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mx_types import QuantConfig, NonlinearConfig
-from repro.core.quantize import MXTensor, dequantize, fake_quant
+from repro.core.quantize import MXTensor, dequantize, fake_quant, pack_weight
 from repro.core import nonlinear as nl
 from repro.models.model_api import Param
 
@@ -67,6 +78,17 @@ def linear(x: jnp.ndarray, w: Param, b: Optional[Param] = None, *,
            q: QuantConfig) -> jnp.ndarray:
     """y = x @ w (+ b); w may be a packed MXTensor in serving mode."""
     wv = w.value
+    if q.mode == "kernel":
+        from repro.kernels import ops
+        if not isinstance(wv, MXTensor):
+            wv = pack_weight(jnp.asarray(wv, jnp.float32), q.weight_fmt,
+                             axis=0)
+        return ops.mxint_linear(
+            x, wv.mantissa, wv.exponent,
+            None if b is None else b.value.astype(jnp.float32),
+            w_block=wv.block_size, quantize_act=True,
+            act_block=q.act_fmt.block_size,
+            act_mant_bits=q.act_fmt.mant_bits)
     if isinstance(wv, MXTensor):
         wf = dequantize(wv, dtype=x.dtype)          # fused by XLA into the dot
     else:
@@ -102,7 +124,11 @@ def unembed(x: jnp.ndarray, table: Param, q: QuantConfig) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 def _nl_on(q: QuantConfig, op: str) -> bool:
     return (q.enabled and q.quantize_nonlinear and
-            q.mode in ("sim", "packed") and op in q.nl_ops)
+            q.mode in ("sim", "packed", "kernel") and op in q.nl_ops)
+
+
+def _nl_kernel(q: QuantConfig, op: str) -> bool:
+    return q.mode == "kernel" and _nl_on(q, op)
 
 
 def _nl_emulate(q: QuantConfig, op: str):
@@ -111,6 +137,14 @@ def _nl_emulate(q: QuantConfig, op: str):
 
 def rmsnorm(x: jnp.ndarray, gamma: Param, *, q: QuantConfig,
             eps: float = 1e-6) -> jnp.ndarray:
+    if _nl_kernel(q, "layernorm"):
+        from repro.kernels import ops
+        y = ops.mxint_layernorm_op(
+            x.astype(jnp.float32), gamma.value, None,
+            act_block=q.act_fmt.block_size, mant_bits=q.act_fmt.mant_bits,
+            lut_bits=q.nonlinear.ln_lut_bits, rms_only=True,
+            quantize_out=True)
+        return y.astype(x.dtype)
     if _nl_emulate(q, "layernorm") == "fixedpoint":
         # 8-bit fixed-point RMS variant of the [9]/SDA integer datapath
         from repro.core.nonlinear import _fixed_point_qdq
@@ -128,6 +162,13 @@ def rmsnorm(x: jnp.ndarray, gamma: Param, *, q: QuantConfig,
 
 def layernorm(x: jnp.ndarray, gamma: Param, beta: Param, *, q: QuantConfig,
               eps: float = 1e-6) -> jnp.ndarray:
+    if _nl_kernel(q, "layernorm"):
+        from repro.kernels import ops
+        y = ops.mxint_layernorm_op(
+            x.astype(jnp.float32), gamma.value, beta.value,
+            act_block=q.act_fmt.block_size, mant_bits=q.act_fmt.mant_bits,
+            lut_bits=q.nonlinear.ln_lut_bits, quantize_out=True)
+        return y.astype(x.dtype)
     if _nl_emulate(q, "layernorm") == "fixedpoint":
         y = nl.fixedpoint_layernorm(x.astype(jnp.float32), gamma.value,
                                     beta.value, bits=8, eps=eps)
@@ -147,6 +188,14 @@ def layernorm(x: jnp.ndarray, gamma: Param, beta: Param, *, q: QuantConfig,
 # activations / softmax
 # ---------------------------------------------------------------------------
 def act_fn(x: jnp.ndarray, kind: str, q: QuantConfig) -> jnp.ndarray:
+    if _nl_kernel(q, "gelu"):
+        from repro.kernels import ops
+        cfg: NonlinearConfig = q.nonlinear
+        y = ops.mxint_gelu_op(
+            x.astype(jnp.float32), fn=kind,
+            act_block=q.act_fmt.block_size, mant_bits=q.act_fmt.mant_bits,
+            lut_bits=cfg.gelu_lut_bits, domain=cfg.gelu_domain)
+        return y.astype(x.dtype)
     em = _nl_emulate(q, "gelu")
     if em == "fixedpoint":
         return nl.fixedpoint_gelu(x.astype(jnp.float32)).astype(x.dtype)
@@ -161,6 +210,13 @@ def act_fn(x: jnp.ndarray, kind: str, q: QuantConfig) -> jnp.ndarray:
 
 
 def softmax(x: jnp.ndarray, q: QuantConfig, axis: int = -1) -> jnp.ndarray:
+    if _nl_kernel(q, "softmax") and axis in (-1, x.ndim - 1):
+        from repro.kernels import ops
+        y = ops.mxint_softmax_op(
+            x.astype(jnp.float32), act_block=q.act_fmt.block_size,
+            mant_bits=q.act_fmt.mant_bits,
+            r_bits=q.nonlinear.softmax_r_bits, quantize_out=True)
+        return y.astype(x.dtype)
     if _nl_emulate(q, "softmax") in ("fixedpoint", "relu6"):
         return nl.fixedpoint_softmax(x.astype(jnp.float32),
                                      axis=axis).astype(x.dtype)

@@ -52,8 +52,9 @@ def init_moe_params(key, cfg: ModelConfig, dtype) -> Dict[str, Param]:
 def _dp_shards(batch: int) -> int:
     """Number of DP shards from the ambient mesh (1 when off-mesh)."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
+        from repro.parallel.sharding import ambient_mesh
+        mesh = ambient_mesh()
+        if mesh is None:
             return 1
         shape = dict(mesh.shape)
         D = shape.get("pod", 1) * shape.get("data", 1)

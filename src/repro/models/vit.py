@@ -9,7 +9,11 @@ Every operator routes through the quantization-aware layer primitives, so a
 `QuantConfig(mode='sim', quantize_nonlinear=True)` config runs the FULL
 bit-accurate MXInt datapath end-to-end: MXInt linears, Fig-3 LayerNorm,
 Eq-12 GELU and Eq-14..20 Softmax — the configuration of the paper's final
-accelerator.
+accelerator.  `mode='kernel'` runs the same datapath through the Pallas
+kernels: packed int8 weight planes into `mxint_linear`, the non-linear ops
+and the attention softmax in-kernel — bit-identical to 'sim' (enforced by
+tests/test_kernel_mode.py) and the deployment path of
+`serving.ViTServingEngine`.
 """
 from __future__ import annotations
 

@@ -125,15 +125,34 @@ def named_sharding_tree(axes_pytree, rules: ShardingRules, mesh: Mesh):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def ambient_mesh():
+    """The mesh the current trace runs under, or None.
+
+    Modern jax exposes it as ``jax.sharding.get_abstract_mesh()``; older
+    jax keeps the ``with mesh:`` context in the legacy thread-resources
+    global — check both so shard_hint works across versions.
+    """
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except AttributeError:
+        pass
+    except Exception:
+        return None
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
 def maybe_constraint(x: jnp.ndarray, axes: Tuple[Optional[str], ...]):
     """with_sharding_constraint when tracing under a mesh, else identity."""
-    env_mesh = None
-    try:
-        env_mesh = jax.sharding.get_abstract_mesh()
-        if env_mesh is not None and env_mesh.empty:
-            env_mesh = None
-    except Exception:
-        env_mesh = None
+    env_mesh = ambient_mesh()
     if env_mesh is None:
         return x
     spec = logical_to_pspec(axes, LOGICAL_RULES, env_mesh.axis_names)

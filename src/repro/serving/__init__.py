@@ -1,4 +1,5 @@
 from repro.serving.engine import (ServeConfig, make_prefill_step,
                                   make_decode_step, pack_params_mxint,
-                                  ServingEngine)
+                                  ServingEngine, ViTServingEngine,
+                                  make_engine)
 from repro.serving.scheduler import BatchScheduler, Request

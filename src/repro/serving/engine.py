@@ -42,6 +42,10 @@ def _should_pack(p: Param) -> bool:
     v = p.value
     shape = getattr(v, "shape", ())
     axes = p.axes
+    if axes and axes[_contraction_axis(p)] is None:
+        return False            # no logical contraction axis: positional
+                                # tables (pos_embed, cls_token) are added,
+                                # not matmul'd — never pack
     # the logical kernel excludes a leading stacked-layers dim
     eff = shape[1:] if axes and axes[0] == "layers" else shape
     if len(eff) < 2:
@@ -180,3 +184,57 @@ class ServingEngine:
             tok, cache = self._decode(self.params, tok, cache)
             out.append(tok)
         return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# ViT classification engine (the paper's deployment scenario)
+# ---------------------------------------------------------------------------
+class ViTServingEngine:
+    """Batched image-classification serving for ViT/DeiT models.
+
+    The token engines above are prefill/decode state machines; a classifier
+    is a stateless batched forward, so this engine only needs weight packing
+    plus fixed-shape batching (requests are padded to ``serve_cfg.batch`` so
+    one jit specialization serves every request size).
+
+    With ``pack_weights=True`` and a model config in ``mode='kernel'`` this
+    is the paper's full deployment: packed int8 planes in HBM, every linear
+    and non-linear op on the accelerator through the Pallas MXInt kernels.
+    """
+
+    def __init__(self, model, params, serve_cfg: ServeConfig):
+        self.model = model
+        self.cfg = serve_cfg
+        if serve_cfg.pack_weights:
+            params = pack_params_mxint(params, serve_cfg.weight_fmt)
+        self.params = params
+        self._logits = jax.jit(model.logits)
+
+    def classify(self, images: jnp.ndarray):
+        """(n, H, W, 3) images -> (labels (n,), logits (n, classes)).
+
+        ``n`` is arbitrary: requests are served in fixed ``cfg.batch``
+        chunks, the final partial chunk zero-padded (and the padding rows
+        dropped from the result).
+        """
+        n = images.shape[0]
+        batch = self.cfg.batch
+        chunks = []
+        for i in range(0, n, batch):
+            chunk = images[i:i + batch]
+            pad = batch - chunk.shape[0]
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad,) + chunk.shape[1:],
+                                      chunk.dtype)])
+            logits = self._logits(self.params, chunk)
+            chunks.append(logits[:batch - pad] if pad else logits)
+        logits = jnp.concatenate(chunks, axis=0)
+        return jnp.argmax(logits, axis=-1), logits
+
+
+def make_engine(model, params, serve_cfg: ServeConfig):
+    """Family-aware engine constructor."""
+    if getattr(model.cfg, "family", None) == "vit":
+        return ViTServingEngine(model, params, serve_cfg)
+    return ServingEngine(model, params, serve_cfg)

@@ -105,15 +105,32 @@ def _pod_compressed_grads(compute_grads, params, batch, err_fb, mesh):
         return loss, grads, jax.tree_util.tree_map(
             lambda e: e[None], new_err)
 
-    mapped = jax.shard_map(
-        per_pod, mesh=mesh,
-        in_specs=(P(), P("pod"), P("pod")),
-        out_specs=(P(), P(), P("pod")),
-        axis_names={"pod"},
-        # scan carries inside the model init as pod-unvarying zeros while
-        # their outputs vary with the pod-local batch; skip the VMA check
-        # (the explicit psum makes the reduction correct by construction)
-        check_vma=False)
+    in_specs = (P(), P("pod"), P("pod"))
+    out_specs = (P(), P(), P("pod"))
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        mapped = sm(
+            per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names={"pod"},
+            # scan carries inside the model init as pod-unvarying zeros
+            # while their outputs vary with the pod-local batch; skip the
+            # VMA check (the explicit psum makes the reduction correct by
+            # construction)
+            check_vma=False)
+    else:
+        # pre-0.5 jax: jax.experimental.shard_map with 'auto' for the
+        # GSPMD axes (manual over 'pod' only) and check_rep as the VMA
+        # check's predecessor
+        # NOTE: partial-manual (auto={data, model}) trips an XLA CHECK in
+        # the jaxlib this pin ships (hlo_sharding_util IsManualSubgroup),
+        # so the legacy path runs fully manual: the pod axis is split, the
+        # intra-pod axes see replicated pod-local arrays.  The wire format
+        # and reduction math are identical; only intra-pod GSPMD layout
+        # differs from the modern path.
+        from jax.experimental.shard_map import shard_map as _legacy_sm
+        mapped = _legacy_sm(
+            per_pod, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False)
     return mapped(params, batch, err_fb)
 
 

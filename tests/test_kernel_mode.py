@@ -1,0 +1,174 @@
+"""End-to-end tests for QuantConfig(mode='kernel') — the Pallas model path.
+
+The 'sim' mode is the bit-accurate oracle for the paper's MXInt datapaths;
+'kernel' routes the same math through the Pallas kernels (interpret mode on
+CPU).  The headline assertion: a DeiT forward in kernel mode equals the sim
+forward BIT-FOR-BIT, while consuming the packed int8 planes directly (no
+host-side dequantize anywhere in the traced program).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.deit import DEIT_MICRO, DEIT_TINY
+from repro.core.mx_types import QuantConfig
+from repro.core.quantize import MXTensor
+from repro.models import build_model
+from repro.models import layers as L
+from repro.serving.engine import (ServeConfig, ViTServingEngine, make_engine,
+                                  pack_params_mxint)
+
+SIM = QuantConfig(mode="sim", quantize_nonlinear=True)
+KERNEL = QuantConfig(mode="kernel", quantize_nonlinear=True)
+
+
+def _models(base, n_layers=2, n_classes=100):
+    cfg = dataclasses.replace(base, n_layers=n_layers, n_classes=n_classes)
+    m_sim = build_model(dataclasses.replace(cfg, quant=SIM))
+    m_ker = build_model(dataclasses.replace(cfg, quant=KERNEL))
+    params = m_sim.init(jax.random.key(0))
+    packed = pack_params_mxint(params, KERNEL.weight_fmt)
+    return m_sim, m_ker, params, packed
+
+
+def _images(n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, size, size, 3)).astype(np.float32))
+
+
+class TestKernelModeParity:
+    def test_deit_tiny_bit_exact_vs_sim(self):
+        """DeiT-Tiny shapes (d=192, 197 tokens): kernel == sim bit-for-bit.
+
+        Every operator is exercised: patch linear (K=768), attention
+        qkv/out linears, the whole-row Pallas MXInt softmax over the prime
+        197-length score rows, LayerNorm and GELU kernels, and the padded
+        (N=100) classifier head.
+        """
+        m_sim, m_ker, params, packed = _models(DEIT_TINY)
+        imgs = _images(2, DEIT_TINY.image_size)
+        want = np.asarray(jax.jit(m_sim.logits)(params, imgs))
+        got = np.asarray(jax.jit(m_ker.logits)(packed, imgs))
+        np.testing.assert_array_equal(got, want)
+
+    def test_deit_micro_bit_exact_vs_sim(self):
+        m_sim, m_ker, params, packed = _models(DEIT_MICRO, n_classes=10)
+        imgs = _images(3, DEIT_MICRO.image_size, seed=7)
+        want = np.asarray(jax.jit(m_sim.logits)(params, imgs))
+        got = np.asarray(jax.jit(m_ker.logits)(packed, imgs))
+        np.testing.assert_array_equal(got, want)
+
+    def test_kernel_mode_works_on_unpacked_params(self):
+        """Float Param leaves are packed on the fly — same result."""
+        m_sim, m_ker, params, packed = _models(DEIT_MICRO, n_classes=10)
+        imgs = _images(1, DEIT_MICRO.image_size, seed=3)
+        a = np.asarray(m_ker.logits(packed, imgs))
+        b = np.asarray(m_ker.logits(params, imgs))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestKernelModeAttentionParity:
+    """Masked + GQA attention through attention_op vs the sim direct path.
+
+    Regression guard for the requantize shift-saturation overflow: masked
+    (-2e38) scores share rows with real scores, driving the row-alignment
+    shift to its 31-bit clamp — `1 << 31` overflowed int32 there.  Also
+    covers the grouped-query fold (K/V contracted once per KV head).
+    """
+
+    @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                               (True, 8)])
+    def test_gqa_masked_bit_exact(self, causal, window):
+        from repro.models import attention as A
+        from repro.models.model_api import ModelConfig
+
+        cfg = ModelConfig(n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+                          d_ff=128, vocab=100, ffn_kind="gelu",
+                          dtype=jnp.float32)
+        p = A.init_attn_params(jax.random.key(0), cfg, jnp.float32)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(2, 24, 64)).astype(np.float32))
+        o_sim, _ = A.attention(p, x, cfg, quant=SIM, causal=causal,
+                               window=window, use_rope=False)
+        o_ker, _ = A.attention(p, x, cfg, quant=KERNEL, causal=causal,
+                               window=window, use_rope=False)
+        np.testing.assert_array_equal(np.asarray(o_ker), np.asarray(o_sim))
+
+
+class TestKernelModeConsumesPackedPlanes:
+    def test_no_dequantize_in_traced_program(self, monkeypatch):
+        """mxint_linear eats the int8 planes: tracing the kernel-mode
+        forward never calls `dequantize` (the packed-mode XLA path does)."""
+        m_sim, m_ker, params, packed = _models(DEIT_MICRO, n_classes=10)
+        imgs = _images(1, DEIT_MICRO.image_size)
+
+        calls = []
+        orig = L.dequantize
+
+        def spy(*a, **k):
+            calls.append(1)
+            return orig(*a, **k)
+
+        monkeypatch.setattr(L, "dequantize", spy)
+        jaxpr = jax.make_jaxpr(m_ker.logits)(packed, imgs)
+        assert not calls, "kernel mode must not dequantize packed weights"
+        assert "pallas_call" in str(jaxpr)
+
+        m_packed = build_model(dataclasses.replace(
+            DEIT_MICRO, n_layers=2, n_classes=10,
+            quant=QuantConfig(mode="packed", quantize_nonlinear=True)))
+        jax.make_jaxpr(m_packed.logits)(packed, imgs)
+        assert calls, "packed mode still uses the fused XLA dequant"
+
+    def test_packed_planes_are_int8(self):
+        _, _, _, packed = _models(DEIT_MICRO, n_classes=10)
+        n_planes = 0
+        for leaf in jax.tree_util.tree_leaves(
+                packed, is_leaf=lambda l: isinstance(l, MXTensor)):
+            if isinstance(leaf, MXTensor):
+                assert leaf.mantissa.dtype == jnp.int8
+                assert leaf.exponent.dtype == jnp.int8
+                n_planes += 1
+        assert n_planes > 0
+
+
+class TestKernelModeConfig:
+    def test_emulate_baselines_rejected(self):
+        with pytest.raises(ValueError):
+            QuantConfig(mode="kernel", emulate="int")
+        with pytest.raises(ValueError):
+            QuantConfig(mode="kernel", quantize_nonlinear=True,
+                        nl_emulate="fixedpoint")
+
+    def test_unknown_mode_still_rejected(self):
+        with pytest.raises(ValueError):
+            QuantConfig(mode="pallas")
+
+
+class TestViTServingEngine:
+    def test_classify_partial_batch_padding(self):
+        cfg = dataclasses.replace(DEIT_MICRO, n_layers=2, n_classes=10,
+                                  quant=KERNEL)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        eng = ViTServingEngine(model, params,
+                               ServeConfig(batch=4, pack_weights=True,
+                                           weight_fmt=KERNEL.weight_fmt))
+        imgs = _images(6, DEIT_MICRO.image_size, seed=5)   # 4 + partial 2
+        labels, logits = eng.classify(imgs)
+        assert labels.shape == (6,)
+        assert logits.shape == (6, 10)
+        # chunking must not change per-image results
+        l2, _ = eng.classify(imgs[4:])
+        np.testing.assert_array_equal(np.asarray(labels[4:]),
+                                      np.asarray(l2))
+
+    def test_make_engine_dispatches_on_family(self):
+        cfg = dataclasses.replace(DEIT_MICRO, n_layers=2, n_classes=10)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        eng = make_engine(model, params, ServeConfig(batch=2))
+        assert isinstance(eng, ViTServingEngine)

@@ -60,7 +60,7 @@ def run():
                 f"bound={'mem' if mmx > cmx else 'compute'}"))
     rows.append(("fig10/note", 0.0,
                  "paper's 93x is FPGA LUT-area-parallelism-limited; "
-                 "TPU-native ratio is roofline-time (DESIGN.md S2)"))
+                 "TPU-native ratio is roofline-time (DESIGN.md §2)"))
     return rows
 
 

@@ -2,8 +2,9 @@
 
 This is the paper's deployment scenario — a ViT whose EVERY operator
 (linears, LayerNorm, GELU, Softmax) runs the MXInt datapath — wrapped in a
-batched inference service: requests arrive, are batched, classified, and
-answered; throughput and accuracy-vs-float are reported.
+batched inference service: requests arrive, are continuously batched into
+one fixed-shape jit, classified, and answered; throughput and
+accuracy-vs-float are reported.
 
 The serving path is ``mode='kernel'``: weights are packed once into int8
 mantissa/exponent planes and fed straight into the Pallas kernels through
@@ -11,41 +12,74 @@ mantissa/exponent planes and fed straight into the Pallas kernels through
 they compile).  The ``mode='sim'`` XLA oracle is also run and must agree
 bit-for-bit — the serving datapath IS the validated datapath.
 
-Run:  PYTHONPATH=src python examples/serve_deit_mxint.py [--requests 64]
+With ``--tp N`` the engine serves SHARDED: the packed planes are
+partitioned over an N-way 'model' mesh and every linear runs per shard
+under shard_map — still bit-identical to the single-device sim oracle
+(DESIGN.md §10).  On CPU the fake devices are forced automatically.
+
+Requests are streamed through ``ClassifyScheduler``: each request carries
+a RANDOM number of images, and the scheduler packs them across request
+boundaries into the fixed batch shape — zero recompiles after warmup.
+
+Run:  PYTHONPATH=src python examples/serve_deit_mxint.py \
+          [--requests 64] [--batch 16] [--tp 2]
 """
 import argparse
 import dataclasses
+import os
 import sys
 import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
-from benchmarks import common
-from repro.core.mx_types import QuantConfig
-from repro.data.pipeline import SyntheticImageData
-from repro.models import build_model
-from repro.serving.engine import ServeConfig, ViTServingEngine
+def _parse_args():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64,
+                    help="total images to serve")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="shard packed planes over an N-way 'model' mesh")
+    return ap.parse_args()
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=16)
-    args = ap.parse_args()
+    args = _parse_args()
+    if args.tp > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # must land before the first jax device query (backend init)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.tp}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
+    from benchmarks import common
+    from repro.core.mx_types import QuantConfig
+    from repro.data.pipeline import SyntheticImageData
+    from repro.models import build_model
+    from repro.serving.engine import ServeConfig, ViTServingEngine
+    from repro.serving.scheduler import ClassifyRequest, ClassifyScheduler
 
     print("training/loading the float DeiT (synthetic 100-class task)...")
     model_f, params = common.trained_deit_micro()
+
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(args.tp)
+        print(f"serving sharded: packed planes over a {args.tp}-way "
+              "'model' mesh (column-parallel, bit-exact)")
 
     kcfg = QuantConfig(mode="kernel", quantize_nonlinear=True)
     model_k = build_model(dataclasses.replace(common.BENCH_DEIT, quant=kcfg))
     engine = ViTServingEngine(
         model_k, params,
         ServeConfig(batch=args.batch, pack_weights=True,
-                    weight_fmt=kcfg.weight_fmt))
+                    weight_fmt=kcfg.weight_fmt),
+        mesh=mesh)
 
     scfg = QuantConfig(mode="sim", quantize_nonlinear=True)
     model_s = build_model(dataclasses.replace(common.BENCH_DEIT, quant=scfg))
@@ -53,31 +87,53 @@ def main():
     classify_f = jax.jit(model_f.logits)
 
     data = SyntheticImageData(batch=args.batch, seed=123, **common._TASK)
-    served = agree = correct = sim_exact = 0
-    t0 = time.time()
-    lat = []
+    # warm the one jit specialization, then stream mixed-size requests
+    warm = data.next_batch()
+    engine.classify(warm["images"])
+    cache_warm = engine.jit_cache_size()
+
+    rng = np.random.default_rng(7)
+    sched = ClassifyScheduler(engine)
+    pool_imgs, pool_labels = [], []
+    served = 0
+    uid = 0
     while served < args.requests:
         batch = data.next_batch()
-        t1 = time.time()
-        pred, logits = engine.classify(batch["images"])
-        jax.block_until_ready(logits)
-        lat.append(time.time() - t1)
-        ref = classify_f(params, batch["images"])
-        sim = classify_s(params, batch["images"])
-        sim_exact += int(np.array_equal(np.asarray(logits), np.asarray(sim)))
-        agree += int(jnp.sum(pred == jnp.argmax(ref, -1)))
-        correct += int(jnp.sum(pred == batch["labels"]))
+        pool_imgs.append(np.asarray(batch["images"]))
+        pool_labels.append(np.asarray(batch["labels"]))
         served += args.batch
-    dt = time.time() - t0
-    n_batches = served // args.batch
+    imgs = np.concatenate(pool_imgs)
+    labels = np.concatenate(pool_labels)
+    # slice the pool into randomly sized requests (1..batch images each)
+    reqs, off = [], 0
+    while off < imgs.shape[0]:
+        n = int(rng.integers(1, args.batch + 1))
+        reqs.append(ClassifyRequest(uid=uid, images=imgs[off:off + n]))
+        uid += 1
+        off += n
 
-    print(f"\nserved {served} requests in {dt:.2f}s "
-          f"({served/dt:.1f} img/s, Pallas kernel path, packed weights)")
-    print(f"  p50 batch latency   : {1e3*np.percentile(lat, 50):.1f} ms")
-    print(f"  accuracy (MXInt)    : {correct/served:.4f}")
-    print(f"  agreement w/float   : {agree/served:.4f}  "
-          f"(paper budget: within 1% -> {agree/served >= 0.99})")
-    print(f"  kernel == sim (bit) : {sim_exact}/{n_batches} batches")
+    t0 = time.time()
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    dt = time.time() - t0
+
+    pred = np.concatenate([r.labels for r in done])
+    logits = np.concatenate([r.logits for r in done])
+    ref = np.asarray(classify_f(params, imgs))
+    sim = np.asarray(classify_s(params, imgs))
+    n = imgs.shape[0]
+
+    print(f"\nserved {n} images across {len(done)} mixed-size requests "
+          f"in {dt:.2f}s ({n/dt:.1f} img/s, Pallas kernel path, packed "
+          f"weights{f', tp={args.tp}' if args.tp > 1 else ''})")
+    print(f"  accuracy (MXInt)    : {np.mean(pred == labels):.4f}")
+    agree = np.mean(pred == np.argmax(ref, -1))
+    print(f"  agreement w/float   : {agree:.4f}  "
+          f"(paper budget: within 1% -> {agree >= 0.99})")
+    print(f"  kernel == sim (bit) : {np.array_equal(logits, sim)}")
+    rc = engine.jit_cache_size() - cache_warm
+    print(f"  recompiles after warmup: {rc if cache_warm >= 0 else 'n/a'}")
 
 
 if __name__ == "__main__":

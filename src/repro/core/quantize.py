@@ -36,6 +36,19 @@ class MXTensor(NamedTuple):
       over units) leaves the static axis valid.
     mant_bits: element mantissa width (static).
     block_size: static block size actually used (may be clamped to the dim).
+    tp_axis: mesh axis name this tensor's planes are sharded over inside a
+      ``shard_map``, or None (the default: unsharded / replicated).  Static
+      aux data, so it survives scan slicing and jit tracing; consumed by
+      ``repro.kernels.ops.mxint_linear`` to insert the matching collective
+      (all_gather for output-sharded planes, psum for contraction-sharded
+      planes — see ``tp_mode``).  Set by
+      ``repro.parallel.sharding.tp_shard_packed_params`` (DESIGN.md §10).
+    tp_mode: 'gather' when the OUTPUT (last) axis is sharded — each shard
+      computes a column slice over the full contraction and the results are
+      concatenated, which is bit-exact by construction; 'psum' when the
+      CONTRACTION axis is sharded — each shard computes a partial sum and
+      the f32 psum re-orders the accumulation (NOT bit-exact vs the
+      single-device oracle; see DESIGN.md §10).
     """
 
     mantissa: jnp.ndarray
@@ -43,6 +56,8 @@ class MXTensor(NamedTuple):
     scale_axis: int
     mant_bits: int
     block_size: int
+    tp_axis: "str | None" = None
+    tp_mode: "str | None" = None
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -62,7 +77,8 @@ class MXTensor(NamedTuple):
 jax.tree_util.register_pytree_node(
     MXTensor,
     lambda t: ((t.mantissa, t.exponent),
-               (t.scale_axis, t.mant_bits, t.block_size)),
+               (t.scale_axis, t.mant_bits, t.block_size, t.tp_axis,
+                t.tp_mode)),
     lambda aux, leaves: MXTensor(leaves[0], leaves[1], *aux),
 )
 

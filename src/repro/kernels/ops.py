@@ -63,8 +63,37 @@ def _pick_block_rows(rows: int, cap: int = 256) -> int:
 def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
                  bias: jnp.ndarray | None = None, *, w_block: int,
                  quantize_act: bool = False, act_block: int = 16,
-                 act_mant_bits: int = 8) -> jnp.ndarray:
+                 act_mant_bits: int = 8, tp_axis: str | None = None,
+                 tp_mode: str | None = None) -> jnp.ndarray:
     """y = x @ W_mx (+ bias) for arbitrary leading dims of x.
+
+    Args:
+      x: activations, float, shape (..., K).
+      w_mant: packed int8 mantissa plane, shape (K, N) — or the local
+        shard (K, N/S) / (K/S, N) when called inside a ``shard_map``
+        with ``tp_axis`` set (DESIGN.md §10).
+      w_exp: packed int8 shared-exponent plane, shape (K/w_block, N)
+        (sharded exactly like ``w_mant``: the block axis is the
+        contraction axis, so the exponent plane inherits the mantissa
+        plane's PartitionSpec).
+      bias: optional float (N,) bias, added AFTER any tensor-parallel
+        collective so sharded and single-device execution add it to
+        identical full-width tiles.
+      w_block: weight block size the planes were packed with (static).
+      quantize_act / act_block / act_mant_bits: in-kernel MXInt
+        quantization of the activation tile (the full integer datapath of
+        paper Fig. 2b).
+      tp_axis: mesh axis name when running inside a ``shard_map`` whose
+        in_specs shard the weight planes; None for single-device.
+      tp_mode: 'gather' — planes are sharded along N (column-parallel):
+        each shard contracts the FULL K for its column slice and the
+        shards are concatenated with a tiled all_gather.  Pure data
+        movement, so the result is bit-identical to the single-device
+        kernel.  'psum' — planes are sharded along K (row-parallel):
+        ``x`` arrives replicated with the full K, is sliced to this
+        shard's K rows, and the partial products are summed with a psum.
+        The f32 psum re-associates the accumulation, so this mode is
+        numerically close but NOT bit-exact (DESIGN.md §10).
 
     The packed planes go into the Pallas kernel untouched — HBM traffic is
     the quantized bytes (the paper's memory win).  In interpret mode
@@ -76,6 +105,12 @@ def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
     jnp oracle for shapes the compiled kernel cannot tile.
     """
     x2, lead = _flatten_rows(x)
+    if tp_axis is not None and tp_mode == "psum":
+        # row-parallel: slice the replicated activations to this shard's
+        # K rows (the weight planes arrive pre-sharded along K)
+        k_local = w_mant.shape[0]
+        x2 = jax.lax.dynamic_slice_in_dim(
+            x2, jax.lax.axis_index(tp_axis) * k_local, k_local, axis=1)
     M, K = x2.shape
     N = w_mant.shape[1]
     act_block = _resolve_block(K, act_block)
@@ -105,6 +140,14 @@ def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
                                  act_block=act_block,
                                  act_mant_bits=act_mant_bits,
                                  quantize_act=quantize_act)
+    if tp_axis is not None:
+        if tp_mode == "gather":
+            y = jax.lax.all_gather(y, tp_axis, axis=1, tiled=True)
+        elif tp_mode == "psum":
+            y = jax.lax.psum(y, tp_axis)
+        else:
+            raise ValueError(f"unknown tp_mode {tp_mode!r}")
+        N = y.shape[1]
     if bias is not None:
         y = y + bias
     return y.reshape(*lead, N).astype(x.dtype)
@@ -115,6 +158,15 @@ def mxint_layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray,
                        act_block: int = 16, mant_bits: int = 8,
                        lut_bits: int = 5, rms_only: bool = False,
                        quantize_out: bool = False):
+    """In-kernel MXInt LayerNorm/RMSNorm (paper Fig. 3 datapath).
+
+    x: float (..., d) activations, normalized over the last axis.
+    gamma/beta: float (d,) scale/shift (beta=None with ``rms_only``).
+    act_block/mant_bits: input block-quantization format; lut_bits: width
+    of the rsqrt LUT.  ``quantize_out`` appends the output MXInt
+    quantize stage (the epilogue the kernel datapath feeds the next
+    quantized linear with — DESIGN.md §5).  Returns float, shape of x.
+    """
     x2, lead = _flatten_rows(x)
     beta_arr = beta if beta is not None else jnp.zeros_like(gamma)
     x2p, rows = _pad_rows(x2, 8)
@@ -130,6 +182,13 @@ def mxint_layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray,
 def mxint_softmax_op(x: jnp.ndarray, *, act_block: int = 16,
                      mant_bits: int = 8, r_bits: int = 2,
                      quantize_out: bool = False) -> jnp.ndarray:
+    """Whole-row MXInt softmax over the last axis (paper Eq. 14-20).
+
+    x: float (..., S) score rows; r_bits: the exp-datapath residual LUT
+    width; ``quantize_out`` quantizes the probabilities (Eq. 20) exactly
+    as the FPGA streams them to the p @ V matmul.  Returns float, same
+    shape (DESIGN.md §5).
+    """
     x2, lead = _flatten_rows(x)
     x2p, rows = _pad_rows(x2, 8)
     y = _sm_kernel(x2p, act_block=_resolve_block(x.shape[-1], act_block),
@@ -143,6 +202,12 @@ def mxint_softmax_op(x: jnp.ndarray, *, act_block: int = 16,
 def mxint_gelu_op(x: jnp.ndarray, *, fn: str = "gelu", act_block: int = 16,
                   mant_bits: int = 8, lut_bits: int = 5,
                   domain: float = 3.0) -> jnp.ndarray:
+    """Elementwise MXInt GELU/SiLU through the LUT datapath (paper Eq. 12).
+
+    x: float (..., d); fn: 'gelu' | 'silu'; lut_bits/domain parameterize
+    the folded LUT.  Output is MXInt-quantized by construction (the LUT
+    emits mantissas).  Returns float, same shape as x.
+    """
     x2, lead = _flatten_rows(x)
     x2p, rows = _pad_rows(x2, 8)
     y = _gelu_kernel(x2p, act_block=_resolve_block(x.shape[-1], act_block),

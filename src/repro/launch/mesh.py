@@ -47,6 +47,25 @@ def make_host_mesh():
     return _make_mesh((1, 1), ("data", "model"))
 
 
+def make_tp_mesh(n_shards: int):
+    """1-D ("model",) mesh for tensor-parallel serving (DESIGN.md §10).
+
+    Uses the first ``n_shards`` visible devices.  On CPU, force host
+    devices first: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    (must be set before jax initializes its backend — see
+    repro.serving.sharded_check for the pattern).
+    """
+    import jax as _jax
+    n_dev = _jax.device_count()
+    if n_dev < n_shards:
+        raise ValueError(
+            f"make_tp_mesh({n_shards}) needs {n_shards} devices, have "
+            f"{n_dev}; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before the "
+            "first jax call")
+    return _make_mesh((n_shards,), ("model",))
+
+
 def mesh_context(mesh):
     """Ambient-mesh context manager across jax versions.
 

@@ -83,12 +83,17 @@ def linear(x: jnp.ndarray, w: Param, b: Optional[Param] = None, *,
         if not isinstance(wv, MXTensor):
             wv = pack_weight(jnp.asarray(wv, jnp.float32), q.weight_fmt,
                              axis=0)
+        # tp_axis/tp_mode are static MXTensor metadata stamped by
+        # tp_shard_packed_params: inside a shard_map the kernel runs on the
+        # local planes and mxint_linear inserts the matching collective
+        # (all_gather / psum) before the bias add (DESIGN.md §10).
         return ops.mxint_linear(
             x, wv.mantissa, wv.exponent,
             None if b is None else b.value.astype(jnp.float32),
             w_block=wv.block_size, quantize_act=True,
             act_block=q.act_fmt.block_size,
-            act_mant_bits=q.act_fmt.mant_bits)
+            act_mant_bits=q.act_fmt.mant_bits,
+            tp_axis=wv.tp_axis, tp_mode=wv.tp_mode)
     if isinstance(wv, MXTensor):
         wf = dequantize(wv, dtype=x.dtype)          # fused by XLA into the dot
     else:

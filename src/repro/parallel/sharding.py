@@ -125,6 +125,118 @@ def named_sharding_tree(axes_pytree, rules: ShardingRules, mesh: Mesh):
         is_leaf=lambda x: isinstance(x, P))
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel sharding of packed MXInt planes (serving; DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def _tp_decision(value, n_shards: int, strategy: str):
+    """Which axis of a packed weight shards under ``strategy``, or None.
+
+    value: an MXTensor whose planes may still be ShapeDtypeStructs
+    (abstract dry-run packing).  Returns (axis, tp_mode) with axis an
+    index into the mantissa shape, or None when the leaf must stay
+    replicated (not packed, not divisible, or the split would straddle a
+    shared-exponent block).
+    """
+    from repro.core.quantize import MXTensor
+    if not isinstance(value, MXTensor):
+        return None
+    shape = value.mantissa.shape
+    if len(shape) < 2:
+        return None
+    scale_axis = value.scale_axis % len(shape)
+    if strategy == "column":
+        axis, mode = len(shape) - 1, "gather"
+        if axis == scale_axis:
+            return None          # output axis carries the shared-exponent
+                                 # blocks (embedding tables): cannot
+                                 # column-shard without splitting blocks
+    elif strategy == "row":
+        axis, mode = scale_axis, "psum"
+        if axis != len(shape) - 2:
+            # mxint_linear contracts the second-to-last plane axis; leaves
+            # whose blocks run elsewhere (embedding/unembedding tables:
+            # last axis) are consumed via dequantize, not the kernel —
+            # sharding them here would silently mismatch.  Replicate.
+            return None
+        # the exponent plane must split evenly too: block boundaries may
+        # not straddle shards (pack with tp_shards=n_shards to guarantee)
+        if (shape[axis] // value.block_size) % n_shards:
+            return None
+    else:
+        raise ValueError(f"unknown tp strategy {strategy!r}")
+    if shape[axis] % n_shards:
+        return None
+    return axis, mode
+
+
+def tp_shard_packed_params(packed_params, n_shards: int,
+                           axis_name: str = "model",
+                           strategy: str = "column"):
+    """Mark packed Param leaves for tensor parallelism and build in_specs.
+
+    packed_params: a Param tree from ``pack_params_mxint`` (MXTensor
+    values on the large matmul weights, plain arrays elsewhere).
+    n_shards: size of the ``axis_name`` mesh axis.
+    strategy:
+      'column' — shard every packed weight along its OUTPUT (last) axis;
+        each shard contracts the full K and `mxint_linear` all_gathers
+        the column slices.  Bit-exact vs single-device by construction
+        (collectives only move data).  The serving default.
+      'row'    — shard along the contraction/block axis (Megatron
+        row-parallel); `mxint_linear` slices the replicated activations
+        and psums partial products.  Halves the activation traffic but
+        the f32 psum re-orders accumulation: close, NOT bit-exact.
+        Pack with ``pack_params_mxint(..., tp_shards=n_shards)`` so block
+        boundaries never straddle shards (DESIGN.md §8).
+
+    Returns ``(marked_params, in_specs)``: the same tree with
+    ``tp_axis``/``tp_mode`` stamped on the sharded MXTensor leaves, and a
+    PartitionSpec tree (one spec per Param position — the exponent plane
+    inherits the mantissa plane's spec, their ranks match) usable as
+    shard_map in_specs or for ``NamedSharding`` device placement.
+    Everything that is not a shardable packed weight (norm scales,
+    biases, positional tables) is replicated: biases are added after the
+    collective inside ``mxint_linear``, so they stay full-width.
+    """
+    from repro.models.model_api import Param, is_param
+
+    def mark(p: Param) -> Param:
+        d = _tp_decision(p.value, n_shards, strategy)
+        if d is None:
+            return p
+        return Param(p.value._replace(tp_axis=axis_name, tp_mode=d[1]),
+                     p.axes)
+
+    def spec(p: Param) -> P:
+        d = _tp_decision(p.value, n_shards, strategy)
+        if d is None:
+            return P()
+        axis, _ = d
+        ndim = len(p.value.mantissa.shape)
+        return P(*(axis_name if i == axis else None for i in range(ndim)))
+
+    marked = jax.tree_util.tree_map(mark, packed_params, is_leaf=is_param)
+    specs = jax.tree_util.tree_map(spec, packed_params, is_leaf=is_param)
+    return marked, specs
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (mirrors repro.train.step's shim).
+
+    Modern jax exposes ``jax.shard_map`` (VMA-checked); the pinned
+    jax 0.4.37 only has ``jax.experimental.shard_map``.  Both are called
+    with replication checking off: the collectives inserted by
+    ``mxint_linear`` make outputs replicated by construction.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as _legacy_sm
+    return _legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
 def ambient_mesh():
     """The mesh the current trace runs under, or None.
 

@@ -2,4 +2,5 @@ from repro.serving.engine import (ServeConfig, make_prefill_step,
                                   make_decode_step, pack_params_mxint,
                                   ServingEngine, ViTServingEngine,
                                   make_engine)
-from repro.serving.scheduler import BatchScheduler, Request
+from repro.serving.scheduler import (BatchScheduler, ClassifyRequest,
+                                     ClassifyScheduler, Request)

@@ -1,9 +1,17 @@
-"""Serving: packed-MXInt weights, prefill/decode step builders, engine.
+"""Serving: packed-MXInt weights, prefill/decode step builders, engines.
 
 ``pack_params_mxint`` converts linear/embedding Param leaves to MXTensor
 planes (int8 mantissas + int8 shared exponents) — the paper's weight
 format.  The serving dry-run lowers with these packed leaves, so
 ``memory_analysis()`` shows the real ~4x HBM reduction (DESIGN.md §8).
+
+``ViTServingEngine`` additionally serves SHARDED: given a mesh with a
+'model' axis, the packed planes are partitioned over the shards
+(mantissa and exponent planes with the same PartitionSpec — they shard
+together by construction) and every linear runs ``mxint_linear`` on its
+local planes under ``shard_map``, bit-identical to the single-device
+kernel/sim path (DESIGN.md §10).  Continuous batching for classification
+lives in ``repro.serving.scheduler.ClassifyScheduler`` (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -20,16 +28,30 @@ from repro.models.model_api import Param, is_param
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Engine knobs.
+
+    max_len: KV-cache capacity (token engines only).
+    batch: the fixed jit batch shape — requests are padded/packed to it.
+    pack_weights / weight_fmt: pack large matmul weights to MXInt planes.
+    temperature: 0 = greedy decode.
+    tp_strategy: how ``ViTServingEngine`` splits packed planes when given
+      a mesh — 'column' (output-axis shards + all_gather, bit-exact) or
+      'row' (contraction-axis shards + psum, faster on real
+      interconnects but re-orders the f32 accumulation; DESIGN.md §10).
+    """
     max_len: int = 4096
     batch: int = 8
     pack_weights: bool = False
     weight_fmt: MXFormat = None
     temperature: float = 0.0          # 0 = greedy
+    tp_strategy: str = "column"
 
     def __post_init__(self):
         if self.pack_weights and self.weight_fmt is None:
             from repro.core.mx_types import MXINT6_WEIGHT
             object.__setattr__(self, "weight_fmt", MXINT6_WEIGHT)
+        if self.tp_strategy not in ("column", "row"):
+            raise ValueError(self.tp_strategy)
 
 
 # ---------------------------------------------------------------------------
@@ -86,11 +108,20 @@ def pack_params_mxint(params, fmt: MXFormat, abstract: bool = False,
     weights.  ``abstract=True`` produces ShapeDtypeStruct planes for the
     dry-run (no allocation).
 
+    A packed (d_in, d_out) kernel becomes two planes: an int8 mantissa
+    plane of the original shape and an int8 shared-exponent plane of
+    shape (d_in / block, d_out) — blocks always run along the
+    contraction axis (``_contraction_axis``), so both planes partition
+    identically along any non-block axis.  Norm scales, biases and
+    positional tables stay un-packed (``_should_pack``).
+
     ``tp_shards``: when the contraction axis is tensor-parallel (row-
-    parallel wo/down projections), the block size is clamped to the
-    PER-SHARD contraction length so shared exponents never straddle shard
-    boundaries (DESIGN.md §8) and the exponent plane shards exactly like
-    the mantissa plane.
+    parallel wo/down projections; ``ServeConfig(tp_strategy='row')``),
+    the block size is clamped to the PER-SHARD contraction length so
+    shared exponents never straddle shard boundaries (DESIGN.md §8) and
+    the exponent plane shards exactly like the mantissa plane.  The
+    column-parallel serving default shards output axes only and packs
+    with ``tp_shards=1`` — byte-identical to single-device packing.
     """
     import dataclasses as _dc
     from repro.core.quantize import _resolve_block
@@ -200,15 +231,83 @@ class ViTServingEngine:
     With ``pack_weights=True`` and a model config in ``mode='kernel'`` this
     is the paper's full deployment: packed int8 planes in HBM, every linear
     and non-linear op on the accelerator through the Pallas MXInt kernels.
+
+    Sharded serving: pass a ``mesh`` with a 'model' axis (e.g.
+    ``repro.launch.mesh.make_tp_mesh(2)``).  The packed planes are
+    device_put pre-sharded over the mesh — per-device HBM holds 1/S of
+    the packed bytes — and ``classify`` runs one ``shard_map``-wrapped
+    jit in which each shard feeds its local int8 planes to
+    ``mxint_linear``.  With the default ``tp_strategy='column'`` the
+    sharded forward is BIT-IDENTICAL to the single-device ``mode='sim'``
+    oracle (asserted by tests/test_sharded_serving.py; design and
+    exactness argument in DESIGN.md §10).
     """
 
-    def __init__(self, model, params, serve_cfg: ServeConfig):
+    def __init__(self, model, params, serve_cfg: ServeConfig, mesh=None):
         self.model = model
         self.cfg = serve_cfg
+        self.mesh = mesh
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        if tp > 1:
+            if not serve_cfg.pack_weights:
+                raise ValueError("sharded serving shards the PACKED planes; "
+                                 "set ServeConfig(pack_weights=True)")
+            self.params, self._logits = self._build_sharded(
+                model, params, serve_cfg, mesh, tp)
+            return
         if serve_cfg.pack_weights:
             params = pack_params_mxint(params, serve_cfg.weight_fmt)
         self.params = params
         self._logits = jax.jit(model.logits)
+
+    @staticmethod
+    def _build_sharded(model, params, serve_cfg: ServeConfig, mesh, tp: int):
+        """Pack -> mark/shard planes -> device_put -> shard_map'd jit."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import (shard_map_compat,
+                                             tp_shard_packed_params)
+        strategy = serve_cfg.tp_strategy
+        packed = pack_params_mxint(
+            params, serve_cfg.weight_fmt,
+            # row-parallel splits the contraction axis: clamp block sizes
+            # to the per-shard length so shared exponents never straddle
+            # shard boundaries.  Column-parallel never splits blocks, so
+            # packing stays byte-identical to the single-device engine.
+            tp_shards=tp if strategy == "row" else 1)
+        marked, specs = tp_shard_packed_params(packed, tp, "model", strategy)
+
+        def put(p: Param, spec) -> Param:
+            ns = NamedSharding(mesh, spec)
+            v = p.value
+            if isinstance(v, MXTensor):
+                v = v._replace(mantissa=jax.device_put(v.mantissa, ns),
+                               exponent=jax.device_put(v.exponent, ns))
+            else:
+                v = jax.device_put(v, ns)
+            return Param(v, p.axes)
+
+        placed = jax.tree_util.tree_map(put, marked, specs, is_leaf=is_param)
+        fwd = shard_map_compat(lambda p, imgs: model.logits(p, imgs),
+                               mesh, in_specs=(specs, P()), out_specs=P())
+        return placed, jax.jit(fwd)
+
+    def jit_cache_size(self) -> int:
+        """Number of jit specializations of the classify forward (-1 when
+        this jax build does not expose cache stats).  The continuous-
+        batching contract: stays at 1 after warmup for ANY request-size
+        mix (tests/test_sharded_serving.py)."""
+        fn = getattr(self._logits, "_cache_size", None)
+        return int(fn()) if fn is not None else -1
+
+    def logits_batch(self, chunk) -> jnp.ndarray:
+        """One jitted forward on a FIXED-shape (cfg.batch, H, W, 3) chunk.
+
+        The single funnel into ``self._logits`` — both ``classify`` and
+        ``ClassifyScheduler`` go through it with an identical argument
+        signature (shape/dtype/sharding), which is what keeps the jit
+        cache at one specialization across arbitrary request mixes.
+        """
+        return self._logits(self.params, jnp.asarray(chunk))
 
     def classify(self, images: jnp.ndarray):
         """(n, H, W, 3) images -> (labels (n,), logits (n, classes)).
@@ -217,6 +316,7 @@ class ViTServingEngine:
         chunks, the final partial chunk zero-padded (and the padding rows
         dropped from the result).
         """
+        images = jnp.asarray(images)
         n = images.shape[0]
         batch = self.cfg.batch
         chunks = []
@@ -227,14 +327,15 @@ class ViTServingEngine:
                 chunk = jnp.concatenate(
                     [chunk, jnp.zeros((pad,) + chunk.shape[1:],
                                       chunk.dtype)])
-            logits = self._logits(self.params, chunk)
+            logits = self.logits_batch(chunk)
             chunks.append(logits[:batch - pad] if pad else logits)
         logits = jnp.concatenate(chunks, axis=0)
         return jnp.argmax(logits, axis=-1), logits
 
 
-def make_engine(model, params, serve_cfg: ServeConfig):
-    """Family-aware engine constructor."""
+def make_engine(model, params, serve_cfg: ServeConfig, mesh=None):
+    """Family-aware engine constructor.  ``mesh`` enables sharded serving
+    for the ViT family (token engines are single-device for now)."""
     if getattr(model.cfg, "family", None) == "vit":
-        return ViTServingEngine(model, params, serve_cfg)
+        return ViTServingEngine(model, params, serve_cfg, mesh=mesh)
     return ServingEngine(model, params, serve_cfg)

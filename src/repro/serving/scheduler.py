@@ -1,10 +1,24 @@
-"""Continuous-batching-lite request scheduler (host side).
+"""Continuous-batching request schedulers (host side; DESIGN.md §7).
 
-Maintains a fixed-width decode batch; finished or empty slots are refilled
-from the waiting queue at step boundaries (the cache slots are reused, the
-jitted decode step never re-specializes because the batch shape is fixed).
-This is the scheduling layer a real serving deployment needs around the
-jitted steps; the dry-run lowers the steps themselves.
+Two schedulers share the same contract — a FIXED batch shape feeds one
+jit specialization forever, while mixed-size request streams are packed
+into it at step boundaries:
+
+``BatchScheduler`` (token engines): maintains a fixed-width decode
+batch.  Admission is WAVE-synchronous: the model's KV cache carries one
+scalar ``cache['index']`` shared by every row, so a prefill can only
+(re)build the whole batch — freed slots therefore idle until the active
+wave drains, then the next wave is admitted in one padded prefill.
+Finished requests are evicted to ``self.finished`` at wave boundaries.
+
+``ClassifyScheduler`` (ViT engines): classification is stateless, so
+admission is fully continuous — each step packs up to ``batch`` images
+from the queue front, ACROSS request boundaries, zero-padding only the
+final partial chunk.  A request's images may span several steps; the
+request completes when its last image is classified.  Because every
+step runs the same (batch, H, W, 3) shape, the jit cache never grows
+past one entry regardless of the request-size mix (asserted via
+``engine.jit_cache_size()`` in tests/test_sharded_serving.py).
 """
 from __future__ import annotations
 
@@ -18,6 +32,10 @@ import numpy as np
 
 @dataclasses.dataclass
 class Request:
+    """One token-generation request.
+
+    prompt: (s,) int32 token ids; generated: filled by the scheduler;
+    done: set on EOS or when ``max_new_tokens`` is reached."""
     uid: int
     prompt: np.ndarray                 # (s,) int32
     max_new_tokens: int = 16
@@ -26,28 +44,48 @@ class Request:
 
 
 class BatchScheduler:
+    """Wave-synchronous continuous batching around a token engine.
+
+    engine: a ``ServingEngine`` (needs ``_prefill``/``_decode``/``params``
+    and ``model.cache_init``).  batch_size: fixed decode width.  eos_id:
+    optional stop token.
+    """
+
     def __init__(self, engine, batch_size: int, eos_id: Optional[int] = None):
         self.engine = engine
         self.batch = batch_size
         self.eos = eos_id
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * batch_size
+        self.finished: List[Request] = []
         self._tok = None
         self._cache = None
 
     def submit(self, req: Request):
+        """Enqueue; admission happens at the next wave boundary.  There is
+        no capacity limit — the queue absorbs any submit burst."""
         self.queue.append(req)
 
-    def _free_slots(self):
-        return [i for i, r in enumerate(self.active) if r is None or r.done]
-
     def _admit(self):
-        """Fill free slots; prefill runs per admission wave (padded batch)."""
-        free = self._free_slots()
-        if not free or not self.queue:
+        """Admit a wave into free slots; one padded full-batch prefill.
+
+        Deferred while ANY active request is still in flight: the KV
+        cache keeps a single scalar index shared by all rows, so a
+        prefill rebuilds the whole batch cache — admitting into a
+        half-finished batch would clobber the in-flight rows' state
+        (regression-tested by TestSchedulerEdgeCases).
+        """
+        if not self.queue:
             return
+        if any(r is not None and not r.done for r in self.active):
+            return                      # wave still draining
+        # evict the finished wave
+        for i, r in enumerate(self.active):
+            if r is not None:
+                self.finished.append(r)
+                self.active[i] = None
         admitted = []
-        for i in free:
+        for i in range(self.batch):
             if not self.queue:
                 break
             self.active[i] = self.queue.popleft()
@@ -55,8 +93,7 @@ class BatchScheduler:
         if not admitted:
             return
         # pad all prompts to a common length, full-batch prefill
-        max_len = max(len(self.active[i].prompt) for i in admitted
-                      if self.active[i] is not None)
+        max_len = max(len(self.active[i].prompt) for i in admitted)
         prompts = np.zeros((self.batch, max_len), np.int32)
         for i in admitted:
             p = self.active[i].prompt
@@ -69,7 +106,12 @@ class BatchScheduler:
         self._tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
 
     def step(self) -> int:
-        """One decode step across the active batch; returns #live requests."""
+        """One decode step across the active batch; returns #live requests.
+
+        Empty queue + empty batch is a no-op returning 0 (safe to call in
+        a drain loop).  Rows whose request hit EOS keep decoding as
+        padding until the wave drains; their output is discarded.
+        """
         self._admit()
         live = [r for r in self.active if r is not None and not r.done]
         if not live or self._tok is None:
@@ -88,7 +130,112 @@ class BatchScheduler:
         return sum(1 for r in self.active if r is not None and not r.done)
 
     def run(self, max_steps: int = 1024) -> List[Request]:
+        """Drain queue + batch; returns every request seen (finished waves
+        first, then the residual active wave)."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 break
-        return [r for r in self.active if r is not None]
+        return self.finished + [r for r in self.active if r is not None]
+
+
+# ---------------------------------------------------------------------------
+# classification-side continuous batching (the ViT serving path)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ClassifyRequest:
+    """One classification request of ``images.shape[0]`` images.
+
+    images: (n, H, W, 3) float; logits/labels: (n, classes)/(n,) numpy,
+    filled incrementally as the scheduler packs this request's images
+    into fixed-shape batches; done: set when all n are classified.
+    """
+    uid: int
+    images: np.ndarray
+    logits: Optional[np.ndarray] = None
+    labels: Optional[np.ndarray] = None
+    done: bool = False
+    _next: int = 0                     # images admitted so far
+
+
+class ClassifyScheduler:
+    """Continuous batching for stateless classification.
+
+    Port of the token-engine ``BatchScheduler`` to the classify side:
+    because a classifier holds no per-request state, admission needs no
+    wave barrier — every ``step()`` packs up to ``batch`` images from
+    the FRONT of the queue, spanning request boundaries, and zero-pads
+    only when the queue runs dry mid-chunk.  All steps reuse the one
+    (batch, H, W, 3) jit specialization of ``engine._logits`` (sharded
+    or not), so mixed request sizes never recompile.
+
+    engine: a ``ViTServingEngine``; batch_size defaults to the engine's
+    ``ServeConfig.batch``.
+    """
+
+    def __init__(self, engine, batch_size: Optional[int] = None):
+        self.engine = engine
+        self.batch = batch_size or engine.cfg.batch
+        self.n_classes = int(getattr(engine.model.cfg, "n_classes", 0))
+        self.queue: deque[ClassifyRequest] = deque()
+        self.finished: List[ClassifyRequest] = []
+
+    def submit(self, req: ClassifyRequest):
+        """Enqueue a request; its images are admitted (possibly split
+        across steps) in FIFO order.  A zero-image request completes in
+        queue order too (with correctly shaped empty results), so
+        position-based result/label pairing stays aligned."""
+        self.queue.append(req)
+
+    def jit_cache_size(self) -> int:
+        """Specialization count of the underlying jitted forward (see
+        ``ViTServingEngine.jit_cache_size``)."""
+        return self.engine.jit_cache_size()
+
+    def _evict_completed(self):
+        """Pop front requests whose images are all classified (including
+        zero-image requests) to ``finished``, preserving FIFO order."""
+        while self.queue and self.queue[0]._next >= \
+                self.queue[0].images.shape[0]:
+            req = self.queue.popleft()
+            if req.logits is None:             # zero-image request
+                req.logits = np.zeros((0, self.n_classes), np.float32)
+                req.labels = np.zeros((0,), np.int64)
+            req.done = True
+            self.finished.append(req)
+
+    def step(self) -> int:
+        """Classify up to ``batch`` images off the queue front; returns
+        the number of images classified (0 when the queue is empty)."""
+        self._evict_completed()
+        take: List[tuple] = []                 # (request, image index)
+        for req in self.queue:
+            while len(take) < self.batch and \
+                    req._next < req.images.shape[0]:
+                take.append((req, req._next))
+                req._next += 1
+            if len(take) >= self.batch:
+                break
+        if not take:
+            return 0
+        img = take[0][0].images
+        chunk = np.zeros((self.batch,) + img.shape[1:], img.dtype)
+        for j, (req, i) in enumerate(take):
+            chunk[j] = req.images[i]
+        logits = np.asarray(self.engine.logits_batch(chunk))
+        for j, (req, i) in enumerate(take):
+            if req.logits is None:
+                n = req.images.shape[0]
+                req.logits = np.zeros((n, logits.shape[-1]), logits.dtype)
+                req.labels = np.zeros((n,), np.int64)
+            req.logits[i] = logits[j]
+            req.labels[i] = int(np.argmax(logits[j]))
+        self._evict_completed()
+        return len(take)
+
+    def run(self, max_steps: int = 4096) -> List[ClassifyRequest]:
+        """Drain the queue; returns the finished requests in completion
+        order."""
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+        return self.finished

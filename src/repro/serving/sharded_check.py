@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS") or
+                           os.environ.get("XLA_FLAGS") or
+                           "--xla_force_host_platform_device_count=2")
+"""Sharded kernel-mode serving self-check (DESIGN.md §10).
+
+The first lines force host platform devices BEFORE any jax import (the
+dryrun pattern) so a ≥2-device 'model' mesh exists on plain CPU.  Never
+import this module from tests — run it as a subprocess:
+
+    PYTHONPATH=src python -m repro.serving.sharded_check [--tp 2] [--bench]
+
+Checks, emitted as one JSON object on stdout:
+  1. PARITY — DeiT-Tiny-shape ``classify()`` on the sharded kernel-mode
+     engine (packed int8 planes partitioned over the mesh, every linear
+     through ``mxint_linear`` per shard under shard_map) equals the
+     single-device ``mode='sim'`` XLA oracle BIT-FOR-BIT with the default
+     column strategy; the row/psum strategy is reported with its max
+     deviation (expected small, nonzero).
+  2. SCHEDULING — a mixed-size request stream through
+     ``ClassifyScheduler`` sustains a fixed-shape jit: after the warmup
+     batch, the jit cache stays at ONE specialization.
+  3. --bench — off/sim/kernel(1 dev)/kernel(sharded) wall-clocks of the
+     same forward, consumed by benchmarks/kernel_bench.py.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.deit import DEIT_TINY
+from repro.core.mx_types import QuantConfig
+from repro.launch.mesh import make_tp_mesh
+from repro.models import build_model
+from repro.serving.engine import ServeConfig, ViTServingEngine
+from repro.serving.scheduler import ClassifyRequest, ClassifyScheduler
+
+SIM = QuantConfig(mode="sim", quantize_nonlinear=True)
+KERNEL = QuantConfig(mode="kernel", quantize_nonlinear=True)
+
+
+def _models(n_layers: int, n_classes: int):
+    cfg = dataclasses.replace(DEIT_TINY, n_layers=n_layers,
+                              n_classes=n_classes)
+    m_sim = build_model(dataclasses.replace(cfg, quant=SIM))
+    m_ker = build_model(dataclasses.replace(cfg, quant=KERNEL))
+    params = m_sim.init(jax.random.key(0))
+    return cfg, m_sim, m_ker, params
+
+
+def _engine(m_ker, params, batch: int, mesh, strategy: str):
+    return ViTServingEngine(
+        m_ker, params,
+        ServeConfig(batch=batch, pack_weights=True,
+                    weight_fmt=KERNEL.weight_fmt, tp_strategy=strategy),
+        mesh=mesh)
+
+
+def parity_check(m_sim, m_ker, params, mesh, batch: int, image_size: int):
+    rng = np.random.default_rng(0)
+    imgs = np.asarray(rng.normal(size=(batch, image_size, image_size, 3)),
+                      np.float32)
+    want = np.asarray(jax.jit(m_sim.logits)(params, imgs))
+    out = {}
+    for strategy in ("column", "row"):
+        eng = _engine(m_ker, params, batch, mesh, strategy)
+        _, logits = eng.classify(imgs)
+        got = np.asarray(logits)
+        out[strategy] = {
+            "bit_exact": bool(np.array_equal(got, want)),
+            "max_abs_diff": float(np.max(np.abs(got - want))),
+        }
+    return out
+
+
+def scheduler_check(m_ker, params, mesh, batch: int, image_size: int,
+                    sizes=(3, 5, 1, 8, 2, 7, 4)):
+    """Mixed request sizes; zero recompiles after the warmup step."""
+    eng = _engine(m_ker, params, batch, mesh, "column")
+    sched = ClassifyScheduler(eng)
+    rng = np.random.default_rng(1)
+    warm = np.asarray(rng.normal(size=(batch, image_size, image_size, 3)),
+                      np.float32)
+    eng.classify(warm)                          # warmup: 1 specialization
+    cache_after_warmup = eng.jit_cache_size()
+    for uid, n in enumerate(sizes):
+        sched.submit(ClassifyRequest(
+            uid=uid, images=np.asarray(
+                rng.normal(size=(n, image_size, image_size, 3)), np.float32)))
+    done = sched.run()
+    ok_results = all(
+        r.done and r.logits.shape == (sizes[r.uid], m_ker.cfg.n_classes)
+        for r in done)
+    return {
+        "requests": len(done),
+        "images": int(sum(sizes)),
+        "all_classified": bool(ok_results and len(done) == len(sizes)),
+        "jit_cache_after_warmup": cache_after_warmup,
+        "jit_cache_after_stream": eng.jit_cache_size(),
+        "recompiles_after_warmup":
+            eng.jit_cache_size() - cache_after_warmup,
+    }
+
+
+def bench_rows(m_sim, m_ker, params, mesh, batch: int, image_size: int,
+               repeats: int = 3):
+    """off / sim / kernel / kernel-sharded wall-clock of one forward."""
+    from repro.serving.engine import pack_params_mxint
+    rng = np.random.default_rng(2)
+    imgs = jnp.asarray(rng.normal(size=(batch, image_size, image_size, 3))
+                       .astype(np.float32))
+
+    def timeit(fn):
+        fn()                                    # compile
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            jax.block_until_ready(fn())
+        return 1e3 * (time.perf_counter() - t0) / repeats
+
+    cfg = m_sim.cfg
+    m_off = build_model(dataclasses.replace(cfg, quant=QuantConfig()))
+    rows = {"off": timeit(lambda: jax.jit(m_off.logits)(params, imgs)),
+            "sim": timeit(lambda: jax.jit(m_sim.logits)(params, imgs))}
+    packed = pack_params_mxint(params, KERNEL.weight_fmt)
+    fwd1 = jax.jit(m_ker.logits)
+    rows["kernel"] = timeit(lambda: fwd1(packed, imgs))
+    eng = _engine(m_ker, params, batch, mesh, "column")
+    rows[f"kernel_tp{mesh.shape['model']}"] = timeit(
+        lambda: eng._logits(eng.params, imgs))
+    return {k: round(v, 1) for k, v in rows.items()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tp", type=int, default=2, help="model-axis shards")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--classes", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--bench", action="store_true",
+                    help="also time off/sim/kernel/sharded forwards")
+    args = ap.parse_args(argv)
+
+    mesh = make_tp_mesh(args.tp)
+    cfg, m_sim, m_ker, params = _models(args.layers, args.classes)
+    report = {
+        "devices": jax.device_count(),
+        "tp": args.tp,
+        "arch": f"deit_tiny_L{args.layers}",
+        "parity": parity_check(m_sim, m_ker, params, mesh, args.batch,
+                               cfg.image_size),
+        "scheduler": scheduler_check(m_ker, params, mesh, args.batch,
+                                     cfg.image_size),
+    }
+    if args.bench:
+        report["bench_ms"] = bench_rows(m_sim, m_ker, params, mesh,
+                                        args.batch, cfg.image_size)
+    ok = (report["parity"]["column"]["bit_exact"] and
+          report["scheduler"]["all_classified"] and
+          report["scheduler"]["recompiles_after_warmup"] == 0)
+    report["ok"] = bool(ok)
+    print(json.dumps(report))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,20 @@
 """Serving substrate: packed weights, engine generate, batch scheduler."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import smoke_config
-from repro.core.mx_types import MXINT8_WEIGHT, MXFormat
+from repro.core.mx_types import MXINT8_WEIGHT, MXFormat, QuantConfig
 from repro.core.quantize import MXTensor
 from repro.models import build_model
 from repro.models.model_api import is_param, unwrap
 from repro.serving.engine import (ServeConfig, ServingEngine,
-                                  pack_params_mxint)
-from repro.serving.scheduler import BatchScheduler, Request
+                                  ViTServingEngine, pack_params_mxint)
+from repro.serving.scheduler import (BatchScheduler, ClassifyRequest,
+                                     ClassifyScheduler, Request)
 
 
 @pytest.fixture(scope="module")
@@ -113,6 +116,162 @@ class TestEngine:
                 np.testing.assert_allclose(np.asarray(lg[0, 0]),
                                            np.asarray(full_logits[0, t]),
                                            rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# scripted stub engine: decode emits last-prompt-token + 1, +2, ... so EOS
+# timing is controlled exactly by the prompt contents (no model in the loop)
+# ---------------------------------------------------------------------------
+_VOCAB = 64
+
+
+class _StubModel:
+    def cache_init(self, batch, max_len):
+        return jnp.zeros((batch,), jnp.int32)
+
+
+class _StubEngine:
+    cfg = ServeConfig(max_len=32, batch=2)
+    model = _StubModel()
+    params = None
+
+    def _prefill(self, params, batch, cache):
+        toks = np.asarray(batch["tokens"])
+        logits = np.zeros((toks.shape[0], 1, _VOCAB), np.float32)
+        logits[np.arange(toks.shape[0]), 0, toks[:, -1]] = 1.0
+        return jnp.asarray(logits), cache
+
+    def _decode(self, params, tok, cache):
+        return tok + 1, cache
+
+
+class TestSchedulerEdgeCases:
+    def _mk(self, batch=2, eos=None):
+        return BatchScheduler(_StubEngine(), batch_size=batch, eos_id=eos)
+
+    def test_empty_queue_step_is_noop(self):
+        sched = self._mk()
+        assert sched.step() == 0
+        assert sched.run(max_steps=4) == []
+
+    def test_submit_beyond_capacity_drains_in_waves(self):
+        sched = self._mk(batch=2)
+        for uid in range(5):                       # > 2x capacity
+            sched.submit(Request(uid=uid, prompt=np.asarray([uid + 1]),
+                                 max_new_tokens=3))
+        done = sched.run()
+        assert len(done) == 5 and all(r.done for r in done)
+        for r in done:                             # scripted: last+1, +2, +3
+            assert r.generated == [r.uid + 2, r.uid + 3, r.uid + 4]
+
+    def test_eos_mid_batch_does_not_clobber_inflight_rows(self):
+        """Row A hits EOS while row B decodes on; the freed slot must idle
+        until the wave drains (the KV cache index is one scalar shared by
+        the batch) — admitting C early used to re-prefill a fresh cache
+        and clobber B's stream."""
+        eos = 12
+        sched = self._mk(batch=2, eos=eos)
+        a = Request(uid=0, prompt=np.asarray([10]), max_new_tokens=6)
+        b = Request(uid=1, prompt=np.asarray([20]), max_new_tokens=6)
+        c = Request(uid=2, prompt=np.asarray([30]), max_new_tokens=2)
+        sched.submit(a)
+        sched.submit(b)
+        sched.step()                               # A:11 B:21
+        sched.step()                               # A:12 (EOS) B:22
+        assert a.done and a.generated == [11, 12]
+        sched.submit(c)
+        sched.step()                               # slot idles; B:23
+        assert not c.done and len(c.generated) == 0    # deferred admission
+        done = sched.run()
+        assert b.generated == [21, 22, 23, 24, 25, 26]  # uninterrupted
+        assert c.done and c.generated == [31, 32]       # admitted after
+        assert {r.uid for r in done} == {0, 1, 2}
+
+    def test_eos_request_evicted_to_finished_on_next_wave(self):
+        sched = self._mk(batch=1, eos=12)
+        sched.submit(Request(uid=0, prompt=np.asarray([11]),
+                             max_new_tokens=8))
+        sched.submit(Request(uid=1, prompt=np.asarray([5]),
+                             max_new_tokens=2))
+        done = sched.run()
+        assert [r.uid for r in done] == [0, 1]
+        assert done[0].generated == [12]           # immediate EOS
+
+
+class TestClassifyScheduler:
+    @pytest.fixture(scope="class")
+    def vit_engine(self):
+        from repro.configs.deit import DEIT_MICRO
+        cfg = dataclasses.replace(DEIT_MICRO, n_layers=2, quant=QuantConfig())
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        return cfg, ViTServingEngine(model, params, ServeConfig(batch=4))
+
+    def _images(self, n, size, seed):
+        rng = np.random.default_rng(seed)
+        return rng.normal(size=(n, size, size, 3)).astype(np.float32)
+
+    def test_mixed_sizes_match_direct_classify(self, vit_engine):
+        cfg, eng = vit_engine
+        sched = ClassifyScheduler(eng)
+        sizes = (3, 6, 1, 2)                       # 12 images, batch 4
+        reqs = [ClassifyRequest(uid=i, images=self._images(n, cfg.image_size,
+                                                           seed=i))
+                for i, n in enumerate(sizes)]
+        for r in reqs:
+            sched.submit(r)
+        done = sched.run()
+        assert len(done) == len(sizes) and all(r.done for r in done)
+        for r in done:
+            want_labels, want_logits = eng.classify(r.images)
+            np.testing.assert_array_equal(r.labels, np.asarray(want_labels))
+            np.testing.assert_array_equal(r.logits, np.asarray(want_logits))
+
+    def test_fixed_shape_jit_stays_warm(self, vit_engine):
+        cfg, eng = vit_engine
+        eng.classify(self._images(4, cfg.image_size, seed=99))   # warm
+        base = eng.jit_cache_size()
+        sched = ClassifyScheduler(eng)
+        for i, n in enumerate((5, 1, 7, 3, 4)):
+            sched.submit(ClassifyRequest(
+                uid=i, images=self._images(n, cfg.image_size, seed=10 + i)))
+        done = sched.run()
+        assert len(done) == 5
+        if base >= 0:                              # cache stats available
+            assert eng.jit_cache_size() == base    # zero recompiles
+
+    def test_zero_image_request_keeps_order_and_shapes(self, vit_engine):
+        """Empty requests complete in FIFO order with (0, n_classes)
+        results, so position-based concatenation stays aligned."""
+        cfg, eng = vit_engine
+        sched = ClassifyScheduler(eng)
+        sched.submit(ClassifyRequest(uid=0, images=self._images(
+            0, cfg.image_size, seed=0)))
+        assert sched.step() == 0                   # evicted, nothing to run
+        assert len(sched.finished) == 1 and sched.finished[0].done
+        sched.submit(ClassifyRequest(uid=1, images=self._images(
+            2, cfg.image_size, seed=1)))
+        sched.submit(ClassifyRequest(uid=2, images=self._images(
+            0, cfg.image_size, seed=2)))
+        sched.submit(ClassifyRequest(uid=3, images=self._images(
+            1, cfg.image_size, seed=3)))
+        done = sched.run()
+        assert [r.uid for r in done] == [0, 1, 2, 3]   # FIFO completion
+        for r in done:
+            assert r.logits.shape[1] == cfg.n_classes
+        # the serve-example aggregation pattern must not trip on empties
+        agg = np.concatenate([r.logits for r in done])
+        assert agg.shape == (3, cfg.n_classes)
+
+    def test_step_counts_images_not_requests(self, vit_engine):
+        cfg, eng = vit_engine
+        sched = ClassifyScheduler(eng)
+        for i in range(3):                         # 3 x 2 images, batch 4
+            sched.submit(ClassifyRequest(
+                uid=i, images=self._images(2, cfg.image_size, seed=20 + i)))
+        assert sched.step() == 4                   # spans request boundary
+        assert sched.step() == 2                   # remainder, zero-padded
+        assert sched.step() == 0
 
 
 class TestScheduler:

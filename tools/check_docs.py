@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Docs link-check: every DESIGN.md section cited in the source exists.
+
+Scans ``src/ benchmarks/ examples/ tests/`` for ``DESIGN.md §N``
+citations (the docstring convention) and fails if docs/DESIGN.md is
+missing, or any cited §N has no ``## §N`` heading, or the README lacks
+the tier-1 verify command.  Run from the repo root (CI does)::
+
+    python tools/check_docs.py
+
+Also importable: ``check(root) -> list[str]`` returns the problems.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+CITE = re.compile(r"DESIGN\.md\s+§(\d+)")
+HEADING = re.compile(r"^##\s+§(\d+)\b", re.M)
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "docs")
+TIER1 = "python -m pytest -x -q"
+
+
+def check(root: Path) -> list:
+    problems = []
+    design = root / "docs" / "DESIGN.md"
+    if not design.exists():
+        return [f"missing {design}"]
+    sections = set(HEADING.findall(design.read_text()))
+
+    for d in SCAN_DIRS:
+        for py in sorted((root / d).rglob("*.py")):
+            if "__pycache__" in py.parts:
+                continue
+            for i, line in enumerate(py.read_text().splitlines(), 1):
+                for sec in CITE.findall(line):
+                    if sec not in sections:
+                        problems.append(
+                            f"{py.relative_to(root)}:{i} cites DESIGN.md "
+                            f"§{sec} but docs/DESIGN.md has no '## §{sec}'")
+
+    readme = root / "README.md"
+    if not readme.exists():
+        problems.append("missing README.md")
+    elif TIER1 not in readme.read_text():
+        problems.append(f"README.md lost the tier-1 command ({TIER1!r})")
+    return problems
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parents[1]
+    problems = check(root)
+    for p in problems:
+        print(f"check_docs: {p}", file=sys.stderr)
+    if not problems:
+        print("check_docs: all DESIGN.md citations resolve")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,8 @@ import numpy as np
 from benchmarks.common import timer
 from repro.core import MXFormat, QuantConfig, quantize
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_decode)
 from repro.kernels.mxint_gelu import mxint_gelu
 from repro.kernels.mxint_layernorm import mxint_layernorm
 from repro.kernels.mxint_matmul import mxint_matmul
@@ -63,6 +64,26 @@ def run():
                                       exp_mode="mxint"))
     rows.append(("kernel/flash_attention_mxint", round(t, 1),
                  "pallas, Eq14-19 exp datapath"))
+    t = timer(lambda: flash_attention(q, k, v, causal=True,
+                                      exp_mode="mxint",
+                                      quantize_scores=True))
+    rows.append(("kernel/flash_attention_mxint_flash", round(t, 1),
+                 "pallas, full Eq14-20 blocked datapath"))
+
+    # native cache layout: (b, hkv, g, d) queries, (b, W, hkv, d) rings
+    qd = jnp.asarray(rng.normal(size=(2, 4, 4, 128)).astype(np.float32)) * 0.3
+    kd = jnp.asarray(rng.normal(
+        size=(2, 256, 4, 128)).astype(np.float32)) * 0.3
+    vd = jnp.asarray(rng.normal(size=(2, 256, 4, 128)).astype(np.float32))
+    valid = jnp.arange(256) <= 200
+    t = timer(lambda: flash_attention_decode(qd, kd, vd, valid))
+    rows.append(("kernel/flash_decode_float", round(t, 1),
+                 "pallas, single-query cache-ring decode"))
+    t = timer(lambda: flash_attention_decode(qd, kd, vd, valid,
+                                             exp_mode="mxint",
+                                             quantize_scores=True))
+    rows.append(("kernel/flash_decode_mxint", round(t, 1),
+                 "pallas, Eq14-20 decode datapath"))
 
     rows.extend(deit_mode_rows())
     rows.extend(deit_sharded_rows())

@@ -3,11 +3,17 @@
 Weights are stored as int8 mantissa planes + shared exponents (the paper's
 format, W8 block-256), the KV cache and scheduler come from repro.serving.
 Uses the llama3-family smoke config so it runs on CPU; pass --arch to pick
-any assigned architecture.
+any assigned architecture.  ``--kernel`` switches the model to
+QuantConfig(mode='kernel'): every linear eats the packed planes in a
+Pallas kernel and each decode step scores the KV cache ring through the
+fused `flash_attention_decode` datapath (DESIGN.md §11) — interpret mode
+on CPU, so it is slower here but is the TPU deployment path.
 
 Run:  PYTHONPATH=src python examples/serve_llm_mxint.py [--arch llama3_8b]
+                                                        [--kernel]
 """
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -15,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.core.mx_types import MXINT8_WEIGHT
+from repro.core.mx_types import MXINT8_WEIGHT, QuantConfig
 from repro.models import build_model
 from repro.serving.engine import ServeConfig, ServingEngine
 from repro.serving.scheduler import BatchScheduler, Request
@@ -26,9 +32,15 @@ def main():
     ap.add_argument("--arch", default="llama3_8b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--kernel", action="store_true",
+                    help="mode='kernel': Pallas linears + fused decode "
+                         "attention over the cache ring")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
+    if args.kernel:
+        cfg = dataclasses.replace(
+            cfg, quant=QuantConfig(mode="kernel", quantize_nonlinear=True))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 

@@ -151,9 +151,14 @@ class QuantConfig:
                  mantissa/exponent planes with no host-side dequantize, and
                  LayerNorm/GELU/Softmax/attention run the in-kernel MXInt
                  datapaths.  Numerically identical to 'sim' (same LUTs and
-                 integer stages); inference-only.  MXInt formats only:
-                 ``emulate`` / ``nl_emulate`` baselines are XLA emulations
-                 with no kernel counterpart.
+                 integer stages) for per-op primitives and whole-row
+                 attention — the ViT production shapes; long sequences
+                 (score matrices past 512x512) and KV-ring decode beyond
+                 one 128-key block use the BLOCKED Eq. 14-20 flash
+                 datapath, which matches 'sim' within LUT granularity but
+                 not bitwise (DESIGN.md §11).  Inference-only.  MXInt
+                 formats only: ``emulate`` / ``nl_emulate`` baselines are
+                 XLA emulations with no kernel counterpart.
     """
 
     mode: str = "off"

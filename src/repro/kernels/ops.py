@@ -15,20 +15,68 @@ numerically identical to the ``mode='sim'`` oracle.
 """
 from __future__ import annotations
 
+import collections
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import _resolve_block
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import (NEG_INF, flash_attention,
+                                           flash_attention_decode)
 from repro.kernels.mxint_gelu import mxint_gelu as _gelu_kernel
 from repro.kernels.mxint_layernorm import mxint_layernorm as _ln_kernel
 from repro.kernels.mxint_matmul import mxint_matmul as _mm_kernel
 from repro.kernels.mxint_softmax import mxint_softmax as _sm_kernel
 
-_NEG_INF = -2.0e38     # matches models/attention.py masking
+_NEG_INF = NEG_INF     # unified sentinel (flash_attention.py is the source)
+
+# ---------------------------------------------------------------------------
+# flash-attention fallback accounting.  The shape gate is STATIC (python
+# control flow over shapes at trace time), so a fallback is counted once per
+# jit specialization that takes it — exactly the granularity at which the
+# Pallas kernel is or is not in the compiled program.  tests assert DeiT
+# shapes never land here (ISSUE 3 acceptance).
+# ---------------------------------------------------------------------------
+FALLBACKS: collections.Counter = collections.Counter()
+
+# interpret-mode pathology guard: a (block_q, d) + 2*(block_k, d) f32 tile
+# set beyond this head dim blows past any useful VMEM budget and the
+# interpreter's memory; everything smaller is padded and runs in-kernel.
+_FLASH_MAX_HEAD_DIM = 2048
+
+
+def attention_fallback_counts() -> dict:
+    """Copy of the per-reason fallback counter (trace-time granularity)."""
+    return dict(FALLBACKS)
+
+
+def reset_attention_fallbacks() -> None:
+    FALLBACKS.clear()
+
+
+def _count_fallback(reason: str, detail: str) -> None:
+    FALLBACKS[reason] += 1
+    warnings.warn(
+        f"attention_op fell back to the XLA reference ({reason}: {detail}); "
+        "the Pallas flash kernel is NOT in this program (the MXInt "
+        "quantization datapath, if requested, still runs via the whole-row "
+        "oracle)", stacklevel=3)
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _pad_dim(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    spec = [(0, 0)] * x.ndim
+    spec[axis] = (0, pad)
+    return jnp.pad(x, spec)
 
 
 def on_tpu() -> bool:
@@ -261,24 +309,41 @@ def _paper_softmax_attention(qf, kf, vf, *, causal: bool, window: int,
 def attention_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                  causal: bool = True, window: int = 0,
                  exp_mode: str = "float", r_bits: int = 2,
+                 quantize_scores: bool = False,
                  softmax_variant: str = "online",
                  act_block: int = 16, mant_bits: int = 8) -> jnp.ndarray:
     """(B, H, S, D) attention through the Pallas kernels.
 
     softmax_variant:
       'online' — blocked flash kernel (online softmax); ``exp_mode='mxint'``
-                 runs the Eq. 14-19 exp LUT inside the flash kernel.  The
-                 long-sequence LM path.
+                 runs the Eq. 14-19 exp LUT inside the flash kernel, and
+                 ``quantize_scores=True`` adds the Eq. 2-3 score and Eq. 20
+                 probability quantization stages (the full paper datapath,
+                 blocked — DESIGN.md §11).  The long-sequence LM path.
       'paper'  — whole-row MXInt softmax through the Pallas softmax kernel
                  (quantized scores AND quantized probabilities, Eq. 14-20
                  exactly as the FPGA streams rows).  The ViT / encoder path;
                  bit-identical to the 'sim' oracle.
 
+    Padding contract ('online' path): ANY shape reaches the flash kernel —
+    query rows are padded to the sublane multiple (8), keys and head lanes
+    to the lane multiple (128), and the pads are sliced off the result.
+    Padded KEYS are masked inside the kernel via the static ``kv_len``
+    cutoff and are numerically INVISIBLE (excluded from the quantizer's
+    shared exponents, the row max, the Eq. 19 sum and the accumulator),
+    unlike model-masked keys which are filled with the unified ``NEG_INF``
+    sentinel BEFORE quantization (sim parity).  Padded query rows compute
+    garbage that is sliced away.  The XLA reference fallback remains ONLY
+    for interpret-mode pathologies (head dim beyond
+    ``_FLASH_MAX_HEAD_DIM``) and is counted + warned via ``FALLBACKS`` —
+    it is never taken silently.
+
     GQA: k/v may carry fewer heads than q (q heads must be a multiple,
-    laid out KV-major: q[:, i] attends k[:, i // groups]).  The 'paper'
-    variant folds the group dim into query rows — K/V are never copied
-    per query head; the flash path broadcasts (the flash kernel wants
-    matched head counts).
+    laid out KV-major: q[:, i] attends k[:, i // groups]).  Neither path
+    copies K/V per query head: the 'paper' variant folds the group dim
+    into query rows, the flash path maps query head b to KV head
+    b // groups in its BlockSpec index map (``kv_groups``); only the
+    pathological-head-dim oracle fallback broadcasts.
     """
     b, h, sq, d = q.shape
     hkv = k.shape[1]
@@ -292,19 +357,97 @@ def attention_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             causal=causal, window=window, scale=scale, act_block=act_block,
             mant_bits=mant_bits, r_bits=r_bits, groups=groups)
         return o.reshape(b, h, sq, d)
-    if groups > 1:
-        k = jnp.broadcast_to(k[:, :, None], (b, hkv, groups, sk, d)
-                             ).reshape(b, h, sk, d)
-        v = jnp.broadcast_to(v[:, :, None], (b, hkv, groups, sk, d)
-                             ).reshape(b, h, sk, d)
     qf = q.reshape(b * h, sq, d)
-    kf = k.reshape(b * h, sk, d)
-    vf = v.reshape(b * h, sk, d)
-    if sq % 8 == 0 and sk % 128 == 0 and d % 128 == 0:
-        o = flash_attention(qf, kf, vf, causal=causal, window=window,
-                            exp_mode=exp_mode, r_bits=r_bits,
-                            interpret=_interpret())
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+    d_p = _ceil_to(d, 128)
+    if d_p > _FLASH_MAX_HEAD_DIM:
+        _count_fallback("head_dim", f"d={d} pads to {d_p}")
+        if groups > 1:                     # oracles want matched heads
+            kf = jnp.broadcast_to(k[:, :, None], (b, hkv, groups, sk, d)
+                                  ).reshape(b * h, sk, d)
+            vf = jnp.broadcast_to(v[:, :, None], (b, hkv, groups, sk, d)
+                                  ).reshape(b * h, sk, d)
+        if quantize_scores:
+            # the fallback must keep the Eq. 2-3 / Eq. 20 datapath, not
+            # just the exp LUT — use the whole-row quantized oracle
+            o = ref.mxint_flash_attention_ref(
+                qf, kf, vf, causal=causal, window=window,
+                act_block=act_block, mant_bits=mant_bits, r_bits=r_bits,
+                scale=scale)
+        else:
+            o = ref.attention_ref(qf, kf, vf, causal=causal, window=window,
+                                  exp_mode=exp_mode, r_bits=r_bits,
+                                  scale=scale)
     else:
-        o = ref.attention_ref(qf, kf, vf, causal=causal, window=window,
-                              exp_mode=exp_mode, r_bits=r_bits)
+        sq_p = _ceil_to(sq, 8)
+        sk_p = _ceil_to(sk, 128)
+        qp = _pad_dim(_pad_dim(qf, 1, sq_p), 2, d_p)
+        kp = _pad_dim(_pad_dim(kf, 1, sk_p), 2, d_p)
+        vp = _pad_dim(_pad_dim(vf, 1, sk_p), 2, d_p)
+        o = flash_attention(qp, kp, vp, causal=causal, window=window,
+                            exp_mode=exp_mode, r_bits=r_bits,
+                            quantize_scores=quantize_scores,
+                            act_block=act_block, mant_bits=mant_bits,
+                            block_q=_pick_block_rows(sq_p, 128),
+                            block_k=min(128, sk_p), scale=scale,
+                            kv_len=sk if sk != sk_p else None,
+                            kv_groups=groups,
+                            interpret=_interpret())[:, :sq, :d]
     return o.reshape(b, h, sq, d)
+
+
+def attention_decode_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        valid: jnp.ndarray, *, exp_mode: str = "float",
+                        r_bits: int = 2, quantize_scores: bool = False,
+                        act_block: int = 16,
+                        mant_bits: int = 8) -> jnp.ndarray:
+    """Single-position decode attention over a KV cache ring (DESIGN.md §11).
+
+    q: (B, Hkv, G, D) — the G query heads sharing each KV head folded
+    into rows, all at the current decode position; k, v: (B, W, Hkv, D)
+    cache rings in the model's NATIVE layout (the kernel grid indexes W
+    and Hkv directly — no per-step transpose/copy of the cache); valid:
+    (W,) bool/int — nonzero for slots holding a live key (the caller's
+    ring/window slot arithmetic, shared by the batch like the scalar
+    cache index).  Returns (B, Hkv, G, D).
+
+    Padding contract: G is padded to the sublane multiple (8), W and D to
+    the lane multiple (128).  Padded SLOTS are masked via the static
+    ``w_len`` cutoff and numerically invisible; invalid-but-real slots
+    follow the model's NEG_INF masking through the quantizer (sim
+    parity).  Fallback to the jnp oracle only for pathological head dims,
+    counted + warned exactly like ``attention_op`` (and it keeps the
+    Eq. 2-3 / Eq. 20 datapath via the whole-row oracle).
+    """
+    b, hkv, g, d = q.shape
+    W = k.shape[1]
+    d_p = _ceil_to(d, 128)
+    if d_p > _FLASH_MAX_HEAD_DIM:
+        _count_fallback("head_dim", f"decode d={d} pads to {d_p}")
+        qf = q.reshape(b * hkv, g, d)
+        kf = jnp.einsum("bwhd->bhwd", k).reshape(b * hkv, W, d)
+        vf = jnp.einsum("bwhd->bhwd", v).reshape(b * hkv, W, d)
+        if quantize_scores:
+            o = ref.mxint_flash_attention_ref(
+                qf, kf, vf, causal=False, key_mask=valid.astype(jnp.int32),
+                act_block=act_block, mant_bits=mant_bits, r_bits=r_bits,
+                scale=d ** -0.5)
+        else:
+            o = ref.decode_attention_ref(qf, kf, vf, valid,
+                                         exp_mode=exp_mode, r_bits=r_bits)
+        return o.reshape(b, hkv, g, d)
+    g_p = _ceil_to(g, 8)
+    W_p = _ceil_to(W, 128)
+    qp = _pad_dim(_pad_dim(q, 2, g_p), 3, d_p)
+    kp = _pad_dim(_pad_dim(k, 1, W_p), 3, d_p)
+    vp = _pad_dim(_pad_dim(v, 1, W_p), 3, d_p)
+    validp = _pad_dim(valid.astype(jnp.int32), 0, W_p)
+    o = flash_attention_decode(qp, kp, vp, validp, exp_mode=exp_mode,
+                               r_bits=r_bits,
+                               quantize_scores=quantize_scores,
+                               act_block=act_block, mant_bits=mant_bits,
+                               block_k=min(128, W_p), scale=d ** -0.5,
+                               w_len=W if W != W_p else None,
+                               interpret=_interpret())
+    return o[:, :, :g, :d]

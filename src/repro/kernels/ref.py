@@ -19,6 +19,8 @@ from repro.core.quantize import (MXTensor, dequantize, quantize,
                                  quantize_dequantize,
                                  requantize_to_max_exponent)
 
+from repro.kernels.flash_attention import NEG_INF as _NEG_INF
+
 _LOG2E = 1.4426950408889634
 
 
@@ -115,7 +117,7 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         mask &= q_pos >= k_pos
     if window > 0:
         mask &= (q_pos - k_pos) < window
-    s = jnp.where(mask[None], s, -1e30)
+    s = jnp.where(mask[None], s, _NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     if exp_mode == "mxint":
         p = exp_datapath((s - m) * _LOG2E, r_bits)
@@ -126,3 +128,86 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     s_m, s_e = jnp.frexp(jnp.maximum(sm, 1e-30))
     p = (p / s_m) * jnp.exp2(-s_e.astype(jnp.float32))
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# whole-row 'paper' oracle for the quantize_scores flash datapath
+# ---------------------------------------------------------------------------
+def mxint_flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                              *, causal: bool = True, window: int = 0,
+                              act_block: int = 16, mant_bits: int = 8,
+                              r_bits: int = 2, scale: float | None = None,
+                              key_mask: jnp.ndarray | None = None
+                              ) -> jnp.ndarray:
+    """Whole-row Eq. 14-20 attention oracle (DESIGN.md §11).
+
+    The full paper softmax on MASKED score rows: Eq. 2-3 score
+    quantization (the NEG_INF fill goes through the quantizer, sim
+    parity), Eq. 14-19 exp LUT, Eq. 20 divide, probability quantization
+    onto the act grid, zero the masked lanes, then p @ V.  This is what
+    ``flash_attention(exp_mode='mxint', quantize_scores=True)`` computes
+    blocked; when one k block covers the row the kernel matches this
+    oracle exactly.  ``key_mask``: optional (Sk,) validity vector (the
+    decode variant's ring mask).
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    if key_mask is not None:
+        mask &= (key_mask > 0)[None, :]
+    s = jnp.where(mask[None], s, _NEG_INF)
+    fmt = MXFormat(mant_bits, act_block)
+    t = quantize(s, fmt, axis=-1)
+    m, lam = requantize_to_max_exponent(t, axis=-1)
+    mf = m.astype(jnp.float32)
+    tt = mf - jnp.max(mf, axis=-1, keepdims=True)
+    z = tt * jnp.exp2(lam.astype(jnp.float32)) * _LOG2E
+    p = exp_datapath(z, r_bits)
+    sm = jnp.sum(p, axis=-1, keepdims=True)
+    s_m, s_e = jnp.frexp(jnp.maximum(sm, 1e-30))
+    y = (p / s_m) * jnp.exp2(-s_e.astype(jnp.float32))
+    y = quantize_dequantize(y, fmt, axis=-1)
+    y = jnp.where(mask[None], y, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", y, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode-variant oracle
+# ---------------------------------------------------------------------------
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid: jnp.ndarray, *, exp_mode: str = "float",
+                         r_bits: int = 2,
+                         scale: float | None = None) -> jnp.ndarray:
+    """Unblocked single-position decode oracle.
+
+    q: (BH, G, D); k, v: (BH, W, D) cache rings; valid: (W,) slot
+    validity.  Masked softmax over the ring with the requested exp
+    datapath — the jnp mirror of ``flash_attention_decode``.
+    """
+    bh, g, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bgd,bwd->bgw", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = (valid > 0)[None, None, :]
+    s = jnp.where(mask, s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    if exp_mode == "mxint":
+        p = exp_datapath((s - m) * _LOG2E, r_bits)
+    else:
+        p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    sm = jnp.sum(p, axis=-1, keepdims=True)
+    s_m, s_e = jnp.frexp(jnp.maximum(sm, 1e-30))
+    p = (p / s_m) * jnp.exp2(-s_e.astype(jnp.float32))
+    return jnp.einsum("bgw,bwd->bgd", p, v.astype(jnp.float32)).astype(q.dtype)

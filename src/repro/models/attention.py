@@ -12,8 +12,12 @@ Three execution paths, all numerically consistent:
   * kernel   — QuantConfig(mode='kernel') routes through
                repro.kernels.ops.attention_op: the whole-row Pallas MXInt
                softmax ('paper' variant, bit-identical to the sim direct
-               path) when quantize_nonlinear is set, the blocked flash
-               kernel otherwise.
+               path) when quantize_nonlinear is set and the score matrix
+               is small, the blocked mxint flash kernel (Eq. 14-20 without
+               the O(S^2) scores, DESIGN.md §11) for long sequences, the
+               float flash kernel otherwise.  Decode (s == 1 with a cache)
+               goes through ops.attention_decode_op — scoring, softmax and
+               p @ V fused in one Pallas kernel over the cache ring.
 
 KV caches:
   full ring: (b, kv_heads, S_max, hd) with dynamic_update_slice writes.
@@ -274,12 +278,35 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
             valid = (slot_pos >= 0) & (slot_pos <= cache_index)
             if window > 0:
                 valid &= (cache_index - slot_pos) < window
-            mask = valid[None, None, None, None, :]      # (1,1,1,1,W)
-            sc = _gqa_scores(q, ck.astype(q.dtype), scale)
-            sc = jnp.where(mask, sc.astype(jnp.float32), _NEG_INF)
-            pr = L.softmax(sc, quant, axis=-1).astype(q.dtype)
-            pr = jnp.where(mask, pr, 0.0)
-            o = jnp.einsum("bkgsS,bSkd->bskgd", pr, cv.astype(q.dtype))
+            if quant.mode == "kernel":
+                # Pallas decode: one fused kernel scores the ring, runs the
+                # (optionally Eq. 14-20 quantized) online softmax and the
+                # p @ V matmul — no XLA L.softmax on the decode path
+                # (DESIGN.md §11).  GQA groups fold into the kernel's
+                # sublane rows; ring validity streams in as `valid`; the
+                # cache planes go in UNTRANSPOSED (the kernel grid walks
+                # the native (b, W, kv, hd) layout — no per-step copy).
+                from repro.kernels import ops as kops
+                qd = q[:, 0]                             # (b, kv, g, hd)
+                kd = ck.astype(q.dtype)
+                vd = cv.astype(q.dtype)
+                if quant.quantize_nonlinear and "softmax" in quant.nl_ops:
+                    od = kops.attention_decode_op(
+                        qd, kd, vd, valid, exp_mode="mxint",
+                        r_bits=quant.nonlinear.softmax_r_bits,
+                        quantize_scores=True,
+                        act_block=quant.act_fmt.block_size,
+                        mant_bits=quant.act_fmt.mant_bits)
+                else:
+                    od = kops.attention_decode_op(qd, kd, vd, valid)
+                o = od[:, None]                          # (b,1,kv,g,hd)
+            else:
+                mask = valid[None, None, None, None, :]  # (1,1,1,1,W)
+                sc = _gqa_scores(q, ck.astype(q.dtype), scale)
+                sc = jnp.where(mask, sc.astype(jnp.float32), _NEG_INF)
+                pr = L.softmax(sc, quant, axis=-1).astype(q.dtype)
+                pr = jnp.where(mask, pr, 0.0)
+                o = jnp.einsum("bkgsS,bSkd->bskgd", pr, cv.astype(q.dtype))
         elif window > 0 and s >= W:
             # SWA prefill longer than the ring: only the last W positions
             # survive; they land on slots (pos % W) — a permutation scatter.
@@ -311,12 +338,25 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
         kh = jnp.einsum("bSkd->bkSd", k)          # (b, kvh, S, hd), no copy
         vh = jnp.einsum("bSkd->bkSd", v)
         if quant.quantize_nonlinear and "softmax" in quant.nl_ops:
-            o = kops.attention_op(
-                qh, kh, vh, causal=causal, window=window,
-                softmax_variant="paper",
-                act_block=quant.act_fmt.block_size,
-                mant_bits=quant.act_fmt.mant_bits,
-                r_bits=quant.nonlinear.softmax_r_bits)
+            if s * S <= 512 * 512:
+                # whole-row 'paper' softmax: bit-identical to the sim
+                # direct path (the ViT / encoder production path)
+                o = kops.attention_op(
+                    qh, kh, vh, causal=causal, window=window,
+                    softmax_variant="paper",
+                    act_block=quant.act_fmt.block_size,
+                    mant_bits=quant.act_fmt.mant_bits,
+                    r_bits=quant.nonlinear.softmax_r_bits)
+            else:
+                # long sequences: blocked mxint flash — the Eq. 14-20
+                # datapath without the O(S^2) score matrix (DESIGN.md §11)
+                o = kops.attention_op(
+                    qh, kh, vh, causal=causal, window=window,
+                    softmax_variant="online", exp_mode="mxint",
+                    quantize_scores=True,
+                    act_block=quant.act_fmt.block_size,
+                    mant_bits=quant.act_fmt.mant_bits,
+                    r_bits=quant.nonlinear.softmax_r_bits)
         else:
             o = kops.attention_op(qh, kh, vh, causal=causal, window=window,
                                   exp_mode="float")
@@ -327,14 +367,26 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
                       quant.mode in ("sim", "packed")) or \
                      (s * kv_len <= 512 * 512)
         if use_direct:
-            q_pos = positions.reshape(-1)[-s:]
-            k_pos = jnp.arange(kv_len)
-            mask = jnp.ones((s, kv_len), dtype=bool)
+            # per-ROW masks: positions may be (b, s) with ragged per-batch
+            # offsets (left-padded prompts) — collapsing to the last batch
+            # row's positions masked every other row wrongly (ISSUE 3).
+            # Self-attention keys are the same tokens, so they carry the
+            # same position VALUES: comparing q values against key INDICES
+            # would let offset rows attend their own future (position
+            # relabeling must be a no-op when rope is off).
+            pos2 = positions if positions.ndim == 2 \
+                else positions.reshape(1, -1)
+            q_pos = pos2[:, -s:]                         # (1|b, s)
+            if kv_len == s:
+                k_pos = q_pos[:, None, :]                # self-attn: values
+            else:
+                k_pos = jnp.arange(kv_len)[None, None, :]  # cross: indices
+            mask = jnp.ones((q_pos.shape[0], s, kv_len), dtype=bool)
             if causal:
-                mask &= q_pos[:, None] >= k_pos[None, :]
+                mask &= q_pos[:, :, None] >= k_pos
             if window > 0:
-                mask &= (q_pos[:, None] - k_pos[None, :]) < window
-            o = _direct_attention(q, k, v, mask[None, None, None], quant,
+                mask &= (q_pos[:, :, None] - k_pos) < window
+            o = _direct_attention(q, k, v, mask[:, None, None], quant,
                                   scale)
         else:
             o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,

@@ -10,6 +10,8 @@ from repro.core import (MXFormat, NonlinearConfig, quantize, dequantize)
 from repro.core import nonlinear as nl
 from repro.core import luts
 
+pytestmark = pytest.mark.slow    # hypothesis-heavy property suite (fast CI lane skips)
+
 FMT = MXFormat(mant_bits=8, block_size=16)
 CFG = NonlinearConfig()
 

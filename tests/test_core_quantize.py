@@ -11,6 +11,8 @@ from repro.core import (MXFormat, MXINT6_WEIGHT, MXINT8_ACT, dequantize,
                         requantize_to_max_exponent)
 from repro.core.quantize import MXTensor, packed_bytes, pack_weight
 
+pytestmark = pytest.mark.slow    # hypothesis-heavy property suite (fast CI lane skips)
+
 jax.config.update("jax_enable_x64", False)
 
 

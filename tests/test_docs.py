@@ -34,12 +34,14 @@ def test_readme_module_map_points_at_real_modules():
         assert (ROOT / "src" / "repro" / mod.rstrip("/")).is_dir()
 
 
-def test_no_tracked_bytecode():
-    """PR-1 accidentally committed __pycache__ binaries; never again."""
+def test_no_tracked_binaries():
+    """PR-1 accidentally committed __pycache__ binaries and two .npz
+    benchmark caches; never again (mirrors the CI check)."""
     proc = subprocess.run(["git", "ls-files"], capture_output=True,
                           text=True, timeout=60, cwd=str(ROOT))
     if proc.returncode != 0:
         return                                 # not a git checkout (sdist)
     bad = [f for f in proc.stdout.splitlines()
-           if f.endswith(".pyc") or "__pycache__" in f]
-    assert not bad, f"tracked bytecode: {bad}"
+           if f.endswith((".pyc", ".pyo", ".npz", ".npy"))
+           or "__pycache__" in f]
+    assert not bad, f"tracked binaries: {bad}"

@@ -14,6 +14,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow    # subprocess dry-runs (fast CI lane skips)
+
 ROOT = Path(__file__).resolve().parents[1]
 
 CASES = [

@@ -11,11 +11,14 @@ devices never leak into this test process — the dryrun-test pattern) on a
   * a mixed-size request stream through ``ClassifyScheduler`` must add
     ZERO jit specializations after the warmup batch (jit cache stats).
 """
+import pytest
 import json
 import os
 import subprocess
 import sys
 from pathlib import Path
+
+pytestmark = pytest.mark.slow    # subprocess + forced multi-device jax init (fast CI lane skips)
 
 ROOT = Path(__file__).resolve().parents[1]
 

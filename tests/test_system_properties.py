@@ -15,6 +15,8 @@ from repro.models import layers as L
 from repro.models.model_api import Param
 from repro.models.moe import moe_ffn, init_moe_params
 
+pytestmark = pytest.mark.slow    # hypothesis-heavy property suite (fast CI lane skips)
+
 
 # ---------------------------------------------------------------------------
 # causality: logits at position i must not depend on tokens > i

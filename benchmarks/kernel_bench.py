@@ -86,7 +86,93 @@ def run():
                  "pallas, Eq14-20 decode datapath"))
 
     rows.extend(deit_mode_rows())
+    rows.extend(deit_ln_fusion_rows())
     rows.extend(deit_sharded_rows())
+    return rows
+
+
+def _ln_linear_hbm_bytes(rows: int, d: int, n: int, w_block: int,
+                         n_linears: int, fused: bool,
+                         act_bytes: int = 4) -> int:
+    """Analytic HBM bytes for a pre-norm feeding ``n_linears`` linears.
+
+    Interpret-mode counters for the DESIGN.md §12 accounting: the kernels
+    are deterministic about what crosses HBM — activations at
+    ``act_bytes``/elt, packed planes at 1 byte/elt (int8 mantissas +
+    int8 shared exponents), outputs at 4 bytes/elt.  Unfused pays the
+    LN write + per-linear read of the normalized tile; fused keeps it in
+    VMEM (the x tile is re-read per fused call instead).
+    """
+    a = rows * d * act_bytes                     # one activation tile
+    planes = d * n + (d // w_block) * n          # mantissa + exponent plane
+    outs = rows * n * 4
+    per_linear = planes + outs
+    if fused:
+        return n_linears * (a + per_linear)      # x read per fused call
+    #         LN read + LN write   + per-linear read of y
+    return (a + a) + n_linears * (a + per_linear)
+
+
+def deit_ln_fusion_rows(archs=("deit_tiny", "deit_small"), batch: int = 1):
+    """Fused vs unfused LN->qkv on DeiT shapes (ROADMAP fused-LN item).
+
+    Wall-clocks are CPU interpret mode (validity, not TPU perf); the
+    HBM-byte rows are the meaningful counters — the fused composite
+    moves strictly fewer bytes (the normalized tile never leaves VMEM),
+    which on TPU is the win for these bandwidth-bound blocks.
+    """
+    from repro.configs.deit import BY_NAME
+    from repro.core.quantize import pack_weight
+    from repro.kernels import ops
+
+    q = QuantConfig(mode="kernel", quantize_nonlinear=True)
+    rng = np.random.default_rng(0)
+    rows = []
+    for arch in archs:
+        cfg = BY_NAME[arch]
+        d = cfg.d_model
+        seq = (cfg.image_size // cfg.patch_size) ** 2 + 1
+        M = batch * seq
+        x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+        g = jnp.ones((d,), jnp.float32)
+        b = jnp.zeros((d,), jnp.float32)
+        wqkv = [pack_weight(
+            jnp.asarray(rng.normal(size=(d, d)).astype(np.float32) * 0.05),
+            q.weight_fmt, axis=0) for _ in range(3)]
+        w_block = wqkv[0].block_size
+        kw = dict(act_block=q.act_fmt.block_size,
+                  mant_bits=q.act_fmt.mant_bits,
+                  lut_bits=q.nonlinear.ln_lut_bits)
+
+        def unfused():
+            h = ops.mxint_layernorm_op(x, g, b, quantize_out=True, **kw)
+            return [ops.mxint_linear(
+                h, w.mantissa, w.exponent, w_block=w_block,
+                quantize_act=True, act_block=q.act_fmt.block_size,
+                act_mant_bits=q.act_fmt.mant_bits) for w in wqkv]
+
+        def fused():
+            return [ops.mxint_ln_linear_op(
+                x, g, b, w.mantissa, w.exponent, w_block=w_block, **kw)
+                for w in wqkv]
+
+        # parity guard: the bench never times two different computations
+        for got, want in zip(fused(), unfused()):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+        t_un = timer(lambda: unfused(), repeats=3)
+        t_fu = timer(lambda: fused(), repeats=3)
+        rows.append((f"kernel/{arch}_ln_qkv_unfused", round(t_un, 1),
+                     "pallas interpret, LN kernel + 3 linear kernels"))
+        rows.append((f"kernel/{arch}_ln_qkv_fused", round(t_fu, 1),
+                     "pallas interpret, 3 fused LN->linear kernels"))
+        hbm_un = _ln_linear_hbm_bytes(M, d, d, w_block, 3, fused=False)
+        hbm_fu = _ln_linear_hbm_bytes(M, d, d, w_block, 3, fused=True)
+        rows.append((f"kernel/{arch}_ln_qkv_hbm_bytes_unfused", hbm_un,
+                     "activation+plane+output bytes over HBM"))
+        rows.append((f"kernel/{arch}_ln_qkv_hbm_bytes_fused", hbm_fu,
+                     f"normalized tile stays in VMEM "
+                     f"(-{100 * (hbm_un - hbm_fu) // hbm_un}% bytes)"))
     return rows
 
 

@@ -13,6 +13,7 @@ block 16) configurations in Fig. 1b.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax.numpy as jnp
@@ -188,3 +189,17 @@ class QuantConfig:
     @property
     def enabled(self) -> bool:
         return self.mode != "off"
+
+    @functools.cached_property
+    def datapath(self):
+        """The execution backend this config resolves to (DESIGN.md §12).
+
+        Resolved ONCE per config from the ``repro.datapath`` registry and
+        cached on the instance (``cached_property`` writes the instance
+        ``__dict__`` directly, which a frozen dataclass permits; field
+        equality/hash are untouched).  Every layer primitive dispatches
+        through this object — mode-string branching lives only in
+        ``repro/datapath/`` and this module's validation.
+        """
+        from repro.datapath import resolve
+        return resolve(self)

@@ -1,0 +1,69 @@
+"""Pluggable execution backends for the quantized-op protocol.
+
+One ``Datapath`` instance per ``QuantConfig.mode`` (DESIGN.md §12):
+
+  'off' / 'fake'    -> ``xla_float``     (plain XLA; 'fake' adds QDQ)
+  'sim' / 'packed'  -> ``mxint_sim``     (bit-accurate MXInt emulation,
+                                          Table II–V baselines)
+  'kernel'          -> ``pallas_kernel`` (Pallas MXInt kernels + the
+                                          fused LN→linear composite)
+
+``resolve(q)`` maps a config to its backend; models reach it through the
+``QuantConfig.datapath`` cached property and never branch on mode strings
+themselves (``tools/check_dispatch.py`` enforces the seam).  Third-party
+backends register with ``register_backend`` — e.g. a future GPU/Triton
+datapath claims a new mode without touching a single call site.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.datapath.base import Datapath
+from repro.datapath.mxint_sim import MXIntSimDatapath
+from repro.datapath.pallas_kernel import PallasKernelDatapath
+from repro.datapath.xla_float import XLAFloatDatapath
+
+__all__ = ["Datapath", "resolve", "register_backend", "backends",
+           "XLAFloatDatapath", "MXIntSimDatapath", "PallasKernelDatapath"]
+
+# mode -> stateless backend singleton.  Per-op knobs travel in the
+# QuantConfig passed to every method, so two modes may share one instance
+# class with different capability flags.
+_BACKENDS: Dict[str, Datapath] = {}
+
+
+def register_backend(mode: str, backend: Datapath,
+                     override: bool = False) -> Datapath:
+    """Register ``backend`` for ``QuantConfig.mode == mode``.
+
+    ``override=True`` replaces an existing registration (tests swap in
+    instrumented backends this way); otherwise double registration is an
+    error so two imports cannot silently fight over a mode.
+    """
+    if not override and mode in _BACKENDS:
+        raise ValueError(f"mode {mode!r} already has backend "
+                         f"{_BACKENDS[mode].name!r}")
+    _BACKENDS[mode] = backend
+    return backend
+
+
+def backends() -> Dict[str, Datapath]:
+    """Copy of the mode -> backend registry."""
+    return dict(_BACKENDS)
+
+
+def resolve(q) -> Datapath:
+    """Backend for ``q.mode``.  Called once per config by the
+    ``QuantConfig.datapath`` cached property."""
+    try:
+        return _BACKENDS[q.mode]
+    except KeyError:
+        raise ValueError(f"no datapath backend registered for mode "
+                         f"{q.mode!r}; known: {sorted(_BACKENDS)}") from None
+
+
+register_backend("off", XLAFloatDatapath(qdq_linears=False))
+register_backend("fake", XLAFloatDatapath(qdq_linears=True))
+register_backend("sim", MXIntSimDatapath(qdq_linears=True))
+register_backend("packed", MXIntSimDatapath(qdq_linears=False))
+register_backend("kernel", PallasKernelDatapath())

@@ -1,0 +1,99 @@
+"""``mxint_sim`` backend: the 'sim' and 'packed' execution modes.
+
+Bit-accurate XLA emulation of the paper's MXInt datapaths — the
+correctness oracle the Pallas kernels are asserted against.  Linears run
+quantize-dequantize in 'sim' (exactly equal to the integer datapath:
+products of <=8-bit mantissas are exact in f32 and the accumulator is
+lossless) or consume pre-packed MXTensor planes in 'packed' (dequant
+fused into the consuming XLA op).  When ``quantize_nonlinear`` routes an
+op here, LayerNorm/Softmax/GELU execute the ``repro.core.nonlinear``
+datapaths; the ``emulate``/``nl_emulate`` knobs swap in the paper's
+Table II–V comparison baselines.  See DESIGN.md §4/§12.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.datapath.base import Datapath
+
+_LOG2E = 1.4426950408889634
+
+
+class MXIntSimDatapath(Datapath):
+    name = "mxint_sim"
+    quantized_nonlinear = True
+
+    def __init__(self, qdq_linears: bool):
+        self.qdq_linears = qdq_linears
+
+    # -- baseline selection --------------------------------------------------
+    def nl_emulate(self, q, op: str):
+        """Active Table II–IV baseline for ``op``, or None (MXInt path)."""
+        return q.nl_emulate if self.nl_on(q, op) else None
+
+    # -- norms ---------------------------------------------------------------
+    def rmsnorm(self, x, gamma, *, q, eps: float = 1e-6):
+        from repro.core import nonlinear as nl
+        if self.nl_emulate(q, "layernorm") == "fixedpoint":
+            # 8-bit fixed-point RMS variant of the [9]/SDA integer datapath
+            xf = nl._fixed_point_qdq(x.astype(jnp.float32), 8)
+            y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) +
+                                   eps)
+            return (nl._fixed_point_qdq(y, 8) * gamma.value).astype(x.dtype)
+        if self.nl_on(q, "layernorm"):
+            y = nl.layernorm_value(x.astype(jnp.float32), gamma.value, None,
+                                   q.nonlinear, q.act_fmt, rms_only=True)
+            return y.astype(x.dtype)
+        return self._float_rmsnorm(x, gamma, eps)
+
+    def layernorm(self, x, gamma, beta, *, q, eps: float = 1e-6):
+        from repro.core import nonlinear as nl
+        if self.nl_emulate(q, "layernorm") == "fixedpoint":
+            y = nl.fixedpoint_layernorm(x.astype(jnp.float32), gamma.value,
+                                        beta.value, bits=8, eps=eps)
+            return y.astype(x.dtype)
+        if self.nl_on(q, "layernorm"):
+            y = nl.layernorm_value(x.astype(jnp.float32), gamma.value,
+                                   beta.value, q.nonlinear, q.act_fmt)
+            return y.astype(x.dtype)
+        return self._float_layernorm(x, gamma, beta, eps)
+
+    # -- activations / softmax / exp -----------------------------------------
+    def act(self, x, kind: str, *, q):
+        from repro.core import nonlinear as nl
+        em = self.nl_emulate(q, "gelu")
+        if em == "fixedpoint":
+            return nl.fixedpoint_gelu(x.astype(jnp.float32)).astype(x.dtype)
+        if em == "relu6":
+            return nl.relu6_gelu(x.astype(jnp.float32)).astype(x.dtype)
+        if self.nl_on(q, "gelu"):
+            f = {"gelu": nl.gelu_value, "silu": nl.silu_value}[kind]
+            return f(x.astype(jnp.float32), q.nonlinear,
+                     q.act_fmt).astype(x.dtype)
+        return super().act(x, kind, q=q)
+
+    def softmax(self, x, *, q, axis: int = -1):
+        from repro.core import nonlinear as nl
+        if self.nl_emulate(q, "softmax") in ("fixedpoint", "relu6"):
+            return nl.fixedpoint_softmax(x.astype(jnp.float32),
+                                         axis=axis).astype(x.dtype)
+        if self.nl_on(q, "softmax"):
+            y = nl.softmax_value(x.astype(jnp.float32), q.nonlinear,
+                                 q.act_fmt, axis=axis)
+            return y.astype(x.dtype)
+        return jax.nn.softmax(x, axis=axis)
+
+    def exp(self, x, *, q):
+        """mLSTM exp gate through the Eq. 14-19 pow2 datapath when softmax
+        routes through the MXInt LUTs."""
+        if self.nl_on(q, "softmax"):
+            from repro.core.nonlinear import exp_datapath
+            return exp_datapath(x * _LOG2E, q.nonlinear.softmax_r_bits)
+        return jnp.exp(x)
+
+    # -- attention -----------------------------------------------------------
+    def _attention_use_direct(self, q, s: int, kv_len: int) -> bool:
+        # the MXInt softmax 'sim' datapath computes whole rows (the paper's
+        # ViT/FPGA path) — always direct when non-linears are quantized
+        return q.quantize_nonlinear or s * kv_len <= 512 * 512

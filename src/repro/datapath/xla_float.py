@@ -1,0 +1,19 @@
+"""``xla_float`` backend: the 'off' and 'fake' execution modes.
+
+Plain XLA float ops end to end.  'off' is the full-precision reference
+path; 'fake' adds quantize-dequantize (straight-through grads) on linear
+weights and activations — QAT-style sweeps — while the non-linear ops
+stay float (``quantized_nonlinear`` is False, so ``nl_on`` never fires
+here, matching the pre-refactor mode gate).  See DESIGN.md §12.
+"""
+from __future__ import annotations
+
+from repro.datapath.base import Datapath
+
+
+class XLAFloatDatapath(Datapath):
+    name = "xla_float"
+    quantized_nonlinear = False
+
+    def __init__(self, qdq_linears: bool):
+        self.qdq_linears = qdq_linears

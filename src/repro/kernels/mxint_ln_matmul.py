@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused MXInt LayerNorm -> matmul (DESIGN.md §12).
+
+The unfused kernel path runs Fig. 3 LayerNorm and the consuming quantized
+linear as two ``pallas_call``s: the normalized, act-quantized tile is
+written to HBM by the first kernel and read straight back by the second —
+a full round-trip of (rows, d) activation bytes that exists only because
+the ops are separate program launches.  This kernel fuses them: the
+LayerNorm datapath runs once per row block into a VMEM scratch, and every
+N-tile of the matmul contracts directly against that resident tile.
+
+Grid: (rows/bm, N/bn), N innermost — the same scratch-persistence pattern
+as the matmul accumulator, but inverted: instead of one output tile
+surviving across K steps, one *input* tile survives across N steps.
+
+  j == 0:  x tile (bm, d) -> block-quantize -> row-max requantize ->
+           integer mean/var -> rsqrt LUT -> gamma/beta -> output
+           quantization (Eq. 2-3 epilogue) -> VMEM scratch ``y``
+           (stored in the model dtype, so the scratch round-trip is
+           bit-identical to the unfused HBM round-trip);
+  all j:   y -> in-register act quantization -> mantissa x mantissa
+           contraction against the packed (d, bn) weight planes
+           (identical stages to mxint_matmul with quantize_act=True).
+
+Bit-exactness vs the unfused sequence holds by construction: both paths
+execute the same float ops in the same order on the same tiles (the K
+contraction is a single tile in both, matching the interpret-mode
+``mxint_linear``); asserted in tests/test_datapath.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import luts
+from repro.kernels.mxint_layernorm import (_rsqrt_lut_stage,
+                                           block_quantize_rows,
+                                           requantize_rows,
+                                           requantize_to_grid)
+from repro.kernels.mxint_matmul import (_broadcast_block_exp,
+                                        _quantize_act_tile)
+
+
+def _mxint_ln_matmul_kernel(x_ref, g_ref, b_ref, lut_ref, wm_ref, we_ref,
+                            o_ref, y_ref, *, act_block: int, mant_bits: int,
+                            lut_bits: int, rms_only: bool, w_block: int):
+    """One (bm, bn) output tile; the LN stage runs only at j == 0 and its
+    result stays resident in the ``y_ref`` VMEM scratch for every j."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _ln():
+        x = x_ref[...].astype(jnp.float32)             # (bm, d)
+        m, e = block_quantize_rows(x, act_block, mant_bits)
+        mf, _ = requantize_rows(m, e)                  # lambda cancels
+        mf = mf.reshape(x.shape)
+        if rms_only:
+            centered = mf
+        else:
+            centered = mf - jnp.mean(mf, axis=-1, keepdims=True)
+        var = jnp.mean(centered * centered, axis=-1, keepdims=True)
+        inv = _rsqrt_lut_stage(var, lut_ref[...], lut_bits)
+        y = centered * inv
+        y = y * g_ref[...][None, :]
+        if not rms_only:
+            y = y + b_ref[...][None, :]
+        y = requantize_to_grid(y, act_block, mant_bits)
+        y_ref[...] = y.astype(y_ref.dtype)
+
+    # matmul stage — identical to _mxint_matmul_kernel's quantize_act path
+    # with a single K tile (bk == d)
+    y = y_ref[...].astype(jnp.float32)                 # (bm, d)
+    wm = wm_ref[...].astype(jnp.float32)               # (d, bn) ints
+    w_scale = _broadcast_block_exp(we_ref[...], w_block)
+    xm, x_scale = _quantize_act_tile(y, act_block, mant_bits)
+    bm_, bk_ = xm.shape
+    nb = bk_ // act_block
+    xg = (xm.reshape(bm_, nb, act_block) * x_scale[:, :, None])
+    o_ref[...] = jax.lax.dot_general(
+        xg.reshape(bm_, bk_), wm * w_scale, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "w_block", "act_block", "mant_bits", "lut_bits", "rms_only",
+    "bm", "bn", "interpret"))
+def mxint_ln_matmul(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                    w_mant: jnp.ndarray, w_exp: jnp.ndarray, *,
+                    w_block: int, act_block: int = 16, mant_bits: int = 8,
+                    lut_bits: int = 5, rms_only: bool = False,
+                    bm: int = 128, bn: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """y[M,N] = MXIntLN(x)[M,K] @ (w_mant * 2^w_exp)[K,N], one kernel.
+
+    x: (rows, d) activations (any float dtype — the LN stage computes in
+    f32 and the scratch holds the model dtype); gamma/beta: (d,) scale /
+    shift (beta ignored with ``rms_only``); w_mant: (d, N) int8 mantissas;
+    w_exp: (d/w_block, N) int8 shared exponents.  The output is NOT
+    bias-added (the wrapper adds bias after any tensor-parallel
+    collective, like ``mxint_linear``).
+    """
+    rows, d = x.shape
+    K, N = w_mant.shape
+    assert K == d, (K, d)
+    assert d % w_block == 0, (d, w_block)
+    assert w_exp.shape == (d // w_block, N), (w_exp.shape, d, w_block, N)
+    bm = min(bm, rows)
+    bn = min(bn, N)
+    assert rows % bm == 0 and N % bn == 0, (rows, N, bm, bn)
+    assert d % min(act_block, d) == 0
+    act_block = min(act_block, d)
+    lut = luts.rsqrt_lut(lut_bits)
+    beta_arr = beta if beta is not None else jnp.zeros_like(gamma)
+
+    kernel = functools.partial(
+        _mxint_ln_matmul_kernel, act_block=act_block, mant_bits=mant_bits,
+        lut_bits=lut_bits, rms_only=rms_only, w_block=w_block)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((lut.shape[0],), lambda i, j: (0,)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((d // w_block, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, d), x.dtype)],
+        interpret=interpret,
+    )(x, gamma, beta_arr, lut, w_mant, w_exp)

@@ -5,13 +5,14 @@ multiples), backend selection (Pallas compiled on TPU, interpret=True on
 CPU, pure-XLA fallback for odd shapes) and expose the kernels under the
 names the model zoo consumes.
 
-This module is the dispatch layer behind ``QuantConfig(mode='kernel')``:
-`models/layers.py` and `models/attention.py` call these wrappers, and each
-wrapper feeds the packed int8 mantissa/exponent planes (weights) or the
-raw activations straight into the corresponding Pallas kernel.  Block
-sizes are resolved exactly like ``repro.core.quantize`` resolves them
-(clamp to the dim, largest divisor), so the kernel datapath is
-numerically identical to the ``mode='sim'`` oracle.
+This module is the execution layer behind the ``pallas_kernel`` datapath
+backend (``QuantConfig(mode='kernel')`` — DESIGN.md §12):
+``repro.datapath.pallas_kernel`` calls these wrappers, and each wrapper
+feeds the packed int8 mantissa/exponent planes (weights) or the raw
+activations straight into the corresponding Pallas kernel.  Block sizes
+are resolved exactly like ``repro.core.quantize`` resolves them (clamp
+to the dim, largest divisor), so the kernel datapath is numerically
+identical to the ``mode='sim'`` oracle.
 """
 from __future__ import annotations
 
@@ -225,6 +226,89 @@ def mxint_layernorm_op(x: jnp.ndarray, gamma: jnp.ndarray,
                    block_rows=_pick_block_rows(x2p.shape[0]),
                    interpret=_interpret())
     return y[:rows].reshape(*lead, x.shape[-1])
+
+
+def mxint_ln_linear_op(x: jnp.ndarray, gamma: jnp.ndarray,
+                       beta: jnp.ndarray | None,
+                       w_mant: jnp.ndarray, w_exp: jnp.ndarray,
+                       bias: jnp.ndarray | None = None, *, w_block: int,
+                       act_block: int = 16, mant_bits: int = 8,
+                       lut_bits: int = 5, rms_only: bool = False,
+                       tp_axis: str | None = None,
+                       tp_mode: str | None = None) -> jnp.ndarray:
+    """Fused MXInt LayerNorm/RMSNorm -> linear (DESIGN.md §12).
+
+    y = MXIntLN(x) @ W_mx (+ bias) for arbitrary leading dims of x — the
+    composite behind ``Datapath.layernorm_linear``: the normalized,
+    act-quantized tile stays in VMEM and feeds the packed-plane
+    contraction directly, removing the full HBM round-trip of the
+    normalized activations that the two-kernel sequence pays.  Argument
+    semantics match ``mxint_layernorm_op`` (gamma/beta/lut_bits/rms_only)
+    plus ``mxint_linear`` (planes/bias/tp_axis/tp_mode); output
+    quantization of the LN stage is always on (the kernel-mode epilogue).
+
+    Bit-identical to ``mxint_layernorm_op(...)`` followed by
+    ``mxint_linear(...)`` — same stages, same order, same single-tile K
+    contraction; the fused VMEM scratch holds the model dtype so even the
+    unfused path's dtype round-trip is reproduced.  Only the 'gather'
+    tensor-parallel mode composes (the collective moves output columns —
+    pure data movement after the fused kernel); 'psum' shards the
+    contraction axis, which the full-row LN never sees, so callers fall
+    back to the two-op sequence (``repro.datapath.pallas_kernel``).
+    Shapes the kernel cannot tile fall back to that same unfused pair —
+    numerically identical by the same argument.
+    """
+    from repro.kernels.mxint_ln_matmul import mxint_ln_matmul
+
+    if tp_mode not in (None, "gather") or \
+            (tp_axis is not None and tp_mode is None):
+        # mirror mxint_linear: a sharded call with anything but 'gather'
+        # fails loudly (the fused kernel and its unfused fallback must
+        # never diverge on the same arguments)
+        raise ValueError(f"fused ln_linear shards only with "
+                         f"tp_mode='gather', got tp_axis={tp_axis!r} "
+                         f"tp_mode={tp_mode!r}")
+    x2, lead = _flatten_rows(x)
+    M, K = x2.shape
+    N = w_mant.shape[1]
+    act_block = _resolve_block(K, act_block)
+    interp = _interpret()
+    if interp:
+        x2p, rows = _pad_rows(x2, 8)
+        npad = (-N) % 128
+        wm, we = w_mant, w_exp
+        if npad:
+            wm = jnp.pad(wm, ((0, 0), (0, npad)))
+            we = jnp.pad(we, ((0, 0), (0, npad)))
+        y = mxint_ln_matmul(x2p, gamma, beta, wm, we, w_block=w_block,
+                            act_block=act_block, mant_bits=mant_bits,
+                            lut_bits=lut_bits, rms_only=rms_only,
+                            bm=_pick_block_rows(x2p.shape[0], 128), bn=128,
+                            interpret=True)[:rows, :N]
+    elif M % 8 == 0 and K % 128 == 0 and N % 128 == 0:
+        y = mxint_ln_matmul(x2, gamma, beta, w_mant, w_exp, w_block=w_block,
+                            act_block=act_block, mant_bits=mant_bits,
+                            lut_bits=lut_bits, rms_only=rms_only,
+                            bm=_pick_block_rows(M, 128), bn=128,
+                            interpret=False)
+    else:
+        # untileable on compiled TPU: unfused two-kernel sequence (the
+        # numerics the fused kernel replicates, so this is not a fallback
+        # in the FALLBACKS sense — same datapath, one extra HBM trip)
+        h = mxint_layernorm_op(
+            x2.astype(jnp.float32), gamma, beta, act_block=act_block,
+            mant_bits=mant_bits, lut_bits=lut_bits, rms_only=rms_only,
+            quantize_out=True).astype(x.dtype)
+        return mxint_linear(h, w_mant, w_exp, bias, w_block=w_block,
+                            quantize_act=True, act_block=act_block,
+                            act_mant_bits=mant_bits, tp_axis=tp_axis,
+                            tp_mode=tp_mode).reshape(*lead, -1)
+    if tp_axis is not None and tp_mode == "gather":
+        y = jax.lax.all_gather(y, tp_axis, axis=1, tiled=True)
+        N = y.shape[1]
+    if bias is not None:
+        y = y + bias
+    return y.reshape(*lead, N).astype(x.dtype)
 
 
 def mxint_softmax_op(x: jnp.ndarray, *, act_block: int = 16,

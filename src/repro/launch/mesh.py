@@ -66,6 +66,23 @@ def make_tp_mesh(n_shards: int):
     return _make_mesh((n_shards,), ("model",))
 
 
+def make_serving_mesh(dp: int, tp: int):
+    """("data", "model") mesh for sharded serving: batch rows over ``dp``
+    data shards, packed weight planes over ``tp`` model shards
+    (DESIGN.md §10).  Needs ``dp * tp`` visible devices (on CPU force
+    host devices first — see ``make_tp_mesh``)."""
+    import jax as _jax
+    need = dp * tp
+    n_dev = _jax.device_count()
+    if n_dev < need:
+        raise ValueError(
+            f"make_serving_mesh(dp={dp}, tp={tp}) needs {need} devices, "
+            f"have {n_dev}; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before the "
+            "first jax call")
+    return _make_mesh((dp, tp), ("data", "model"))
+
+
 def mesh_context(mesh):
     """Ambient-mesh context manager across jax versions.
 

@@ -1,23 +1,31 @@
 """Attention for every arch: GQA/MQA, RoPE, qk-norm, sliding window, caches.
 
-Three execution paths, all numerically consistent:
+This module owns the attention ORCHESTRATION — projections, RoPE, cache
+ring arithmetic, mask semantics — while the execution of the attention
+math itself dispatches through the pluggable backend resolved from the
+config (``quant.datapath`` — DESIGN.md §12):
 
-  * direct   — masked softmax on the full score matrix; used for short
-               sequences and for the MXInt softmax 'sim' datapath (the
-               paper's ViT path computes whole rows, like the FPGA design).
-  * chunked  — lax.scan online-softmax over KV chunks (flash-attention
-               algebra in pure XLA); used whenever the score matrix would
-               not fit (32k prefill, 4k training).  This is what the
-               multi-pod dry-run lowers.
-  * kernel   — QuantConfig(mode='kernel') routes through
-               repro.kernels.ops.attention_op: the whole-row Pallas MXInt
-               softmax ('paper' variant, bit-identical to the sim direct
-               path) when quantize_nonlinear is set and the score matrix
-               is small, the blocked mxint flash kernel (Eq. 14-20 without
-               the O(S^2) scores, DESIGN.md §11) for long sequences, the
-               float flash kernel otherwise.  Decode (s == 1 with a cache)
-               goes through ops.attention_decode_op — scoring, softmax and
-               p @ V fused in one Pallas kernel over the cache ring.
+  * xla_float / mxint_sim — masked softmax on the full score matrix
+               (direct; the paper's whole-row ViT path, also the MXInt
+               'sim' datapath) or the lax.scan online-softmax over query
+               blocks for score matrices that would not fit (32k prefill,
+               4k training).  The direct/chunked helpers below are shared
+               by both backends.
+  * pallas_kernel — repro.kernels.ops.attention_op: the whole-row Pallas
+               MXInt softmax ('paper' variant, bit-identical to the sim
+               direct path) when quantize_nonlinear is set and the score
+               matrix is small, the blocked mxint flash kernel (Eq. 14-20
+               without the O(S^2) scores, DESIGN.md §11) for long
+               sequences, the float flash kernel otherwise.  Decode
+               (s == 1 with a cache) goes through
+               ops.attention_decode_op — scoring, softmax and p @ V fused
+               in one Pallas kernel over the cache ring.
+
+``prenorm``: blocks may hand their pre-attention norm parameters to
+``attention`` instead of normalizing first; the q/k/v projections then
+ride the backend's fused ``layernorm_linear`` composite when it exists
+(kernel mode: normalized tile stays in VMEM) and fall back to the
+norm-then-linear sequence otherwise — bit-identical either way.
 
 KV caches:
   full ring: (b, kv_heads, S_max, hd) with dynamic_update_slice writes.
@@ -71,6 +79,31 @@ def _split_heads(x, n, hd):
 def _gqa_scores(q, k, scale):
     """q: (b, s, kv, g, hd); k: (b, S, kv, hd) -> (b, kv, g, s, S)."""
     return jnp.einsum("bskgd,bSkd->bkgsS", q, k) * scale
+
+
+def positions_mask(positions, s: int, kv_len: int, causal: bool,
+                   window: int) -> jnp.ndarray:
+    """(1|b, s, kv_len) bool mask from per-row positions.
+
+    per-ROW masks: positions may be (b, s) with ragged per-batch offsets
+    (left-padded prompts) — collapsing to the last batch row's positions
+    masked every other row wrongly (ISSUE 3).  Self-attention keys are
+    the same tokens, so they carry the same position VALUES: comparing q
+    values against key INDICES would let offset rows attend their own
+    future (position relabeling must be a no-op when rope is off).
+    """
+    pos2 = positions if positions.ndim == 2 else positions.reshape(1, -1)
+    q_pos = pos2[:, -s:]                             # (1|b, s)
+    if kv_len == s:
+        k_pos = q_pos[:, None, :]                    # self-attn: values
+    else:
+        k_pos = jnp.arange(kv_len)[None, None, :]    # cross: indices
+    mask = jnp.ones((q_pos.shape[0], s, kv_len), dtype=bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos
+    if window > 0:
+        mask &= (q_pos[:, :, None] - k_pos) < window
+    return mask
 
 
 def _direct_attention(q, k, v, mask, quant: QuantConfig, scale):
@@ -221,7 +254,8 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
               causal: bool = True,
               kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
               use_rope: bool = True,
-              chunk: int = 1024):
+              chunk: int = 1024,
+              prenorm: Optional[Tuple] = None):
     """Returns (output (b, s, d), updated cache or None).
 
     Modes:
@@ -229,6 +263,12 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
       cache given, s > 1              -> prefill (writes 0..s)
       cache given, s == 1             -> decode at cache_index
       kv_override                     -> cross attention (encoder K/V)
+
+    prenorm: optional ('ln'|'rms', gamma, beta) — the block's
+    pre-attention norm.  When given, x arrives UN-normalized and the
+    q/k/v projections run through the ``layernorm_linear`` composite
+    (fused on backends that provide it; norm-then-linear otherwise —
+    bit-identical, DESIGN.md §12).  beta is None for 'rms'.
     """
     b, s, _ = x.shape
     hd = cfg.hd
@@ -236,10 +276,32 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
     g = cfg.n_heads // kvh
     scale = hd ** -0.5
 
-    q = _split_heads(L.linear(x, p["wq"], q=quant), cfg.n_heads, hd)
+    _proj_ws = [p["wq"]] if kv_override is not None else \
+        [p["wq"], p["wk"], p["wv"]]
+    if prenorm is not None and not all(
+            quant.datapath.fuses_norm_linear(quant, x, w)
+            for w in _proj_ws):
+        # no fusion for EVERY projection this call feeds (config,
+        # sharding, or compiled-TPU tiling — GQA gives wk/wv a different
+        # N than wq): normalize ONCE up front — the classic block; a
+        # partial answer would replay the norm inside the declining
+        # projections' fallbacks
+        nk, ng, nb = prenorm
+        x = (L.rmsnorm(x, ng, q=quant, eps=cfg.norm_eps) if nk == "rms"
+             else L.layernorm(x, ng, nb, q=quant, eps=cfg.norm_eps))
+        prenorm = None
+
+    def in_proj(w):
+        if prenorm is None:
+            return L.linear(x, w, q=quant)
+        nk, ng, nb = prenorm
+        return L.layernorm_linear(x, ng, nb, w, q=quant, eps=cfg.norm_eps,
+                                  rms_only=(nk == "rms"))
+
+    q = _split_heads(in_proj(p["wq"]), cfg.n_heads, hd)
     if kv_override is None:
-        k = _split_heads(L.linear(x, p["wk"], q=quant), kvh, hd)
-        v = _split_heads(L.linear(x, p["wv"], q=quant), kvh, hd)
+        k = _split_heads(in_proj(p["wk"]), kvh, hd)
+        v = _split_heads(in_proj(p["wv"]), kvh, hd)
     else:
         k, v = kv_override
 
@@ -278,35 +340,12 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
             valid = (slot_pos >= 0) & (slot_pos <= cache_index)
             if window > 0:
                 valid &= (cache_index - slot_pos) < window
-            if quant.mode == "kernel":
-                # Pallas decode: one fused kernel scores the ring, runs the
-                # (optionally Eq. 14-20 quantized) online softmax and the
-                # p @ V matmul — no XLA L.softmax on the decode path
-                # (DESIGN.md §11).  GQA groups fold into the kernel's
-                # sublane rows; ring validity streams in as `valid`; the
-                # cache planes go in UNTRANSPOSED (the kernel grid walks
-                # the native (b, W, kv, hd) layout — no per-step copy).
-                from repro.kernels import ops as kops
-                qd = q[:, 0]                             # (b, kv, g, hd)
-                kd = ck.astype(q.dtype)
-                vd = cv.astype(q.dtype)
-                if quant.quantize_nonlinear and "softmax" in quant.nl_ops:
-                    od = kops.attention_decode_op(
-                        qd, kd, vd, valid, exp_mode="mxint",
-                        r_bits=quant.nonlinear.softmax_r_bits,
-                        quantize_scores=True,
-                        act_block=quant.act_fmt.block_size,
-                        mant_bits=quant.act_fmt.mant_bits)
-                else:
-                    od = kops.attention_decode_op(qd, kd, vd, valid)
-                o = od[:, None]                          # (b,1,kv,g,hd)
-            else:
-                mask = valid[None, None, None, None, :]  # (1,1,1,1,W)
-                sc = _gqa_scores(q, ck.astype(q.dtype), scale)
-                sc = jnp.where(mask, sc.astype(jnp.float32), _NEG_INF)
-                pr = L.softmax(sc, quant, axis=-1).astype(q.dtype)
-                pr = jnp.where(mask, pr, 0.0)
-                o = jnp.einsum("bkgsS,bSkd->bskgd", pr, cv.astype(q.dtype))
+            # backend decode: pallas_kernel runs one fused Pallas kernel
+            # over the ring (scoring + online softmax + p @ V, no XLA
+            # L.softmax in the trace — DESIGN.md §11); the XLA backends
+            # score the ring directly through their own softmax
+            o = quant.datapath.attention_decode(q, ck, cv, valid, q=quant,
+                                                scale=scale)
         elif window > 0 and s >= W:
             # SWA prefill longer than the ring: only the last W positions
             # survive; they land on slots (pos % W) — a permutation scatter.
@@ -328,69 +367,14 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
             new_cache = {"k": ck, "v": cv}
             o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
                                      window=window, chunk=chunk, scale=scale)
-    elif quant.mode == "kernel":
-        # Pallas route (kernel mode): heads-major layout into attention_op.
-        # 'paper' variant = whole-row MXInt softmax in the Pallas kernel
-        # (bit-identical to the 'sim' direct path); float flash otherwise.
-        from repro.kernels import ops as kops
-        S = k.shape[1]
-        qh = jnp.einsum("bskgd->bkgsd", q).reshape(b, kvh * g, s, hd)
-        kh = jnp.einsum("bSkd->bkSd", k)          # (b, kvh, S, hd), no copy
-        vh = jnp.einsum("bSkd->bkSd", v)
-        if quant.quantize_nonlinear and "softmax" in quant.nl_ops:
-            if s * S <= 512 * 512:
-                # whole-row 'paper' softmax: bit-identical to the sim
-                # direct path (the ViT / encoder production path)
-                o = kops.attention_op(
-                    qh, kh, vh, causal=causal, window=window,
-                    softmax_variant="paper",
-                    act_block=quant.act_fmt.block_size,
-                    mant_bits=quant.act_fmt.mant_bits,
-                    r_bits=quant.nonlinear.softmax_r_bits)
-            else:
-                # long sequences: blocked mxint flash — the Eq. 14-20
-                # datapath without the O(S^2) score matrix (DESIGN.md §11)
-                o = kops.attention_op(
-                    qh, kh, vh, causal=causal, window=window,
-                    softmax_variant="online", exp_mode="mxint",
-                    quantize_scores=True,
-                    act_block=quant.act_fmt.block_size,
-                    mant_bits=quant.act_fmt.mant_bits,
-                    r_bits=quant.nonlinear.softmax_r_bits)
-        else:
-            o = kops.attention_op(qh, kh, vh, causal=causal, window=window,
-                                  exp_mode="float")
-        o = jnp.einsum("bkgsd->bskgd", o.reshape(b, kvh, g, s, hd))
     else:
-        kv_len = k.shape[1]
-        use_direct = (quant.enabled and quant.quantize_nonlinear and
-                      quant.mode in ("sim", "packed")) or \
-                     (s * kv_len <= 512 * 512)
-        if use_direct:
-            # per-ROW masks: positions may be (b, s) with ragged per-batch
-            # offsets (left-padded prompts) — collapsing to the last batch
-            # row's positions masked every other row wrongly (ISSUE 3).
-            # Self-attention keys are the same tokens, so they carry the
-            # same position VALUES: comparing q values against key INDICES
-            # would let offset rows attend their own future (position
-            # relabeling must be a no-op when rope is off).
-            pos2 = positions if positions.ndim == 2 \
-                else positions.reshape(1, -1)
-            q_pos = pos2[:, -s:]                         # (1|b, s)
-            if kv_len == s:
-                k_pos = q_pos[:, None, :]                # self-attn: values
-            else:
-                k_pos = jnp.arange(kv_len)[None, None, :]  # cross: indices
-            mask = jnp.ones((q_pos.shape[0], s, kv_len), dtype=bool)
-            if causal:
-                mask &= q_pos[:, :, None] >= k_pos
-            if window > 0:
-                mask &= (q_pos[:, :, None] - k_pos) < window
-            o = _direct_attention(q, k, v, mask[:, None, None], quant,
-                                  scale)
-        else:
-            o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
-                                     window=window, chunk=chunk, scale=scale)
+        # cache-less execution: the backend picks its path — direct masked
+        # softmax / query-chunked online softmax (XLA backends, with the
+        # ragged-positions mask semantics of ``positions_mask``) or the
+        # Pallas attention kernels (pallas_kernel)
+        o = quant.datapath.attention(q, k, v, q=quant, positions=positions,
+                                     causal=causal, window=window,
+                                     scale=scale, chunk=chunk)
 
     o = o.reshape(b, s, cfg.n_heads * hd)
     out = L.linear(o, p["wo"], q=quant)

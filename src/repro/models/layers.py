@@ -1,39 +1,38 @@
 """Quantization-aware layer primitives shared by every architecture.
 
-Each primitive dispatches on QuantConfig.mode:
+Thin forwarding wrappers: each primitive dispatches through the pluggable
+execution backend resolved once from the config (``q.datapath`` — the
+``repro.datapath`` registry, DESIGN.md §12).  The five ``QuantConfig``
+modes map onto three backends:
 
-  'off'    — plain float ops.
-  'fake'   — MXInt quantize-dequantize (straight-through grads) on weights
-             and (optionally) activations; float non-linear ops unless
-             quantize_nonlinear is set.
-  'sim'    — bit-accurate MXInt datapaths from repro.core.nonlinear for
-             LayerNorm/softmax/GELU-family; linears run QDQ (exactly equal
-             to the integer datapath: products of <=8-bit mantissas are
-             exact in f32, and the TPU accumulator is lossless).
-  'packed' — weights arrive as MXTensor leaves (int8 planes); dequant is
-             fused into the consuming XLA op.  Serving path.
-  'kernel' — the Pallas execution path (repro.kernels.ops): linears feed
-             the packed int8 mantissa/exponent planes straight into
-             `mxint_linear` (no host-side dequantize — HBM traffic is the
-             quantized bytes), and, when ``quantize_nonlinear`` is set,
-             LayerNorm / RMSNorm / GELU / SiLU / softmax run the in-kernel
-             MXInt datapaths (`mxint_layernorm_op` / `mxint_gelu_op` /
-             `mxint_softmax_op`).  Numerically identical to 'sim' — same
-             LUTs, same integer stages, same output quantization — so the
-             oracle doubles as the parity check.  Inference-only (the
-             Pallas calls carry no VJP); weights that are not already
-             MXTensor leaves are packed on the fly.
+  'off' / 'fake'   -> ``xla_float``     plain XLA float ops; 'fake' adds
+                      MXInt quantize-dequantize (straight-through grads)
+                      on linear weights/activations.
+  'sim' / 'packed' -> ``mxint_sim``     bit-accurate MXInt datapaths from
+                      repro.core.nonlinear plus the Table II–V
+                      ``emulate``/``nl_emulate`` baselines; 'packed'
+                      consumes MXTensor weight leaves with the dequant
+                      fused into the consuming XLA op (serving path).
+  'kernel'         -> ``pallas_kernel`` the Pallas execution path
+                      (repro.kernels.ops): packed int8 planes straight
+                      into `mxint_linear`, in-kernel LN/GELU/softmax, and
+                      the fused `layernorm_linear` composite.  Bit-exact
+                      vs 'sim'.  Inference-only.
+
+The public call signatures below are STABLE — external scripts
+(examples/serve_deit_mxint.py, serve_llm_mxint.py) call them directly —
+and no mode-string branching is allowed here (tools/check_dispatch.py
+enforces that the dispatch seam stays inside repro/datapath/).
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.mx_types import QuantConfig, NonlinearConfig
-from repro.core.quantize import MXTensor, dequantize, fake_quant, pack_weight
-from repro.core import nonlinear as nl
+from repro.core.mx_types import QuantConfig
+# re-exported for external callers of the pre-refactor surface
+from repro.core.quantize import MXTensor, dequantize  # noqa: F401
 from repro.models.model_api import Param
 
 
@@ -47,189 +46,86 @@ def shard_hint(x: jnp.ndarray, spec) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# linear
+# linears
 # ---------------------------------------------------------------------------
-def _maybe_qdq_weight(w: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
-    if q.mode in ("fake", "sim"):
-        if q.emulate == "int":
-            from repro.core.quantize import per_tensor_int_qdq
-            return per_tensor_int_qdq(w, q.weight_fmt.mant_bits)
-        if q.emulate == "fp8":
-            from repro.core.quantize import fp8_e4m3_qdq
-            return fp8_e4m3_qdq(w)
-        return fake_quant(w, q.weight_fmt.mant_bits,
-                          q.weight_fmt.block_size, 0)
-    return w
-
-
-def _maybe_qdq_act(x: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
-    if q.mode in ("fake", "sim"):
-        if q.emulate == "int":
-            from repro.core.quantize import per_tensor_int_qdq
-            return per_tensor_int_qdq(x, q.act_fmt.mant_bits)
-        if q.emulate == "fp8":
-            from repro.core.quantize import fp8_e4m3_qdq
-            return fp8_e4m3_qdq(x)
-        return fake_quant(x, q.act_fmt.mant_bits, q.act_fmt.block_size, -1)
-    return x
-
-
 def linear(x: jnp.ndarray, w: Param, b: Optional[Param] = None, *,
            q: QuantConfig) -> jnp.ndarray:
     """y = x @ w (+ b); w may be a packed MXTensor in serving mode."""
-    wv = w.value
-    if q.mode == "kernel":
-        from repro.kernels import ops
-        if not isinstance(wv, MXTensor):
-            wv = pack_weight(jnp.asarray(wv, jnp.float32), q.weight_fmt,
-                             axis=0)
-        # tp_axis/tp_mode are static MXTensor metadata stamped by
-        # tp_shard_packed_params: inside a shard_map the kernel runs on the
-        # local planes and mxint_linear inserts the matching collective
-        # (all_gather / psum) before the bias add (DESIGN.md §10).
-        return ops.mxint_linear(
-            x, wv.mantissa, wv.exponent,
-            None if b is None else b.value.astype(jnp.float32),
-            w_block=wv.block_size, quantize_act=True,
-            act_block=q.act_fmt.block_size,
-            act_mant_bits=q.act_fmt.mant_bits,
-            tp_axis=wv.tp_axis, tp_mode=wv.tp_mode)
-    if isinstance(wv, MXTensor):
-        wf = dequantize(wv, dtype=x.dtype)          # fused by XLA into the dot
-    else:
-        wf = _maybe_qdq_weight(wv, q).astype(x.dtype)
-    xf = _maybe_qdq_act(x, q)
-    y = jnp.einsum("...k,kn->...n", xf, wf)
-    if b is not None:
-        y = y + b.value.astype(y.dtype)
-    return y
+    return q.datapath.linear(x, w, b, q=q)
+
+
+def _maybe_qdq_weight(w: jnp.ndarray, q: QuantConfig) -> jnp.ndarray:
+    """Deprecated alias for ``q.datapath.qdq_weight`` (kept for external
+    callers; forwards with no warning)."""
+    return q.datapath.qdq_weight(w, q=q)
 
 
 def embed_lookup(tokens: jnp.ndarray, table: Param, q: QuantConfig,
                  dtype) -> jnp.ndarray:
-    tv = table.value
-    if isinstance(tv, MXTensor):
-        tf = dequantize(tv, dtype=dtype)
-    else:
-        tf = _maybe_qdq_weight(tv, q).astype(dtype)
+    tf = q.datapath.weight_value(table.value, q=q, dtype=dtype)
     return jnp.take(tf, tokens, axis=0)
 
 
 def unembed(x: jnp.ndarray, table: Param, q: QuantConfig) -> jnp.ndarray:
-    tv = table.value
-    if isinstance(tv, MXTensor):
-        tf = dequantize(tv, dtype=x.dtype)
-    else:
-        tf = _maybe_qdq_weight(tv, q).astype(x.dtype)
+    tf = q.datapath.weight_value(table.value, q=q, dtype=x.dtype)
     return jnp.einsum("...d,vd->...v", x, tf)
 
 
 # ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
-def _nl_on(q: QuantConfig, op: str) -> bool:
-    return (q.enabled and q.quantize_nonlinear and
-            q.mode in ("sim", "packed", "kernel") and op in q.nl_ops)
-
-
-def _nl_kernel(q: QuantConfig, op: str) -> bool:
-    return q.mode == "kernel" and _nl_on(q, op)
-
-
-def _nl_emulate(q: QuantConfig, op: str):
-    return q.nl_emulate if _nl_on(q, op) else None
-
-
 def rmsnorm(x: jnp.ndarray, gamma: Param, *, q: QuantConfig,
             eps: float = 1e-6) -> jnp.ndarray:
-    if _nl_kernel(q, "layernorm"):
-        from repro.kernels import ops
-        y = ops.mxint_layernorm_op(
-            x.astype(jnp.float32), gamma.value, None,
-            act_block=q.act_fmt.block_size, mant_bits=q.act_fmt.mant_bits,
-            lut_bits=q.nonlinear.ln_lut_bits, rms_only=True,
-            quantize_out=True)
-        return y.astype(x.dtype)
-    if _nl_emulate(q, "layernorm") == "fixedpoint":
-        # 8-bit fixed-point RMS variant of the [9]/SDA integer datapath
-        from repro.core.nonlinear import _fixed_point_qdq
-        xf = _fixed_point_qdq(x.astype(jnp.float32), 8)
-        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
-        return (_fixed_point_qdq(y, 8) * gamma.value).astype(x.dtype)
-    if _nl_on(q, "layernorm"):
-        y = nl.layernorm_value(x.astype(jnp.float32), gamma.value, None,
-                               q.nonlinear, q.act_fmt, rms_only=True)
-        return y.astype(x.dtype)
-    xf = x.astype(jnp.float32)
-    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
-    return (y * gamma.value).astype(x.dtype)
+    return q.datapath.rmsnorm(x, gamma, q=q, eps=eps)
 
 
 def layernorm(x: jnp.ndarray, gamma: Param, beta: Param, *, q: QuantConfig,
               eps: float = 1e-6) -> jnp.ndarray:
-    if _nl_kernel(q, "layernorm"):
-        from repro.kernels import ops
-        y = ops.mxint_layernorm_op(
-            x.astype(jnp.float32), gamma.value, beta.value,
-            act_block=q.act_fmt.block_size, mant_bits=q.act_fmt.mant_bits,
-            lut_bits=q.nonlinear.ln_lut_bits, quantize_out=True)
-        return y.astype(x.dtype)
-    if _nl_emulate(q, "layernorm") == "fixedpoint":
-        y = nl.fixedpoint_layernorm(x.astype(jnp.float32), gamma.value,
-                                    beta.value, bits=8, eps=eps)
-        return y.astype(x.dtype)
-    if _nl_on(q, "layernorm"):
-        y = nl.layernorm_value(x.astype(jnp.float32), gamma.value, beta.value,
-                               q.nonlinear, q.act_fmt)
-        return y.astype(x.dtype)
-    xf = x.astype(jnp.float32)
-    mu = jnp.mean(xf, -1, keepdims=True)
-    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
-    y = (xf - mu) * jax.lax.rsqrt(var + eps)
-    return (y * gamma.value + beta.value).astype(x.dtype)
+    return q.datapath.layernorm(x, gamma, beta, q=q, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# composite: norm fused into the consuming linear (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def layernorm_linear(x: jnp.ndarray, gamma: Param, beta: Optional[Param],
+                     w: Param, b: Optional[Param] = None, *,
+                     q: QuantConfig, eps: float = 1e-6,
+                     rms_only: bool = False) -> jnp.ndarray:
+    """LayerNorm/RMSNorm immediately followed by a quantized linear.
+
+    Uses the backend's fused composite when provided (``pallas_kernel``
+    keeps the normalized act-quantized tile in VMEM — one HBM round-trip
+    removed) and falls back to the two-op sequence otherwise.  Both paths
+    are bit-identical under any one config (the composite-hook contract,
+    asserted in tests/test_datapath.py), so blocks call this
+    unconditionally.
+    """
+    dp = q.datapath
+    if dp.layernorm_linear is not None:
+        return dp.layernorm_linear(x, gamma, beta, w, b, q=q, eps=eps,
+                                   rms_only=rms_only)
+    h = (dp.rmsnorm(x, gamma, q=q, eps=eps) if rms_only
+         else dp.layernorm(x, gamma, beta, q=q, eps=eps))
+    return dp.linear(h, w, b, q=q)
+
+
+def rmsnorm_linear(x: jnp.ndarray, gamma: Param, w: Param,
+                   b: Optional[Param] = None, *, q: QuantConfig,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm -> linear through the same composite seam."""
+    return layernorm_linear(x, gamma, None, w, b, q=q, eps=eps,
+                            rms_only=True)
 
 
 # ---------------------------------------------------------------------------
 # activations / softmax
 # ---------------------------------------------------------------------------
 def act_fn(x: jnp.ndarray, kind: str, q: QuantConfig) -> jnp.ndarray:
-    if _nl_kernel(q, "gelu"):
-        from repro.kernels import ops
-        cfg: NonlinearConfig = q.nonlinear
-        y = ops.mxint_gelu_op(
-            x.astype(jnp.float32), fn=kind,
-            act_block=q.act_fmt.block_size, mant_bits=q.act_fmt.mant_bits,
-            lut_bits=cfg.gelu_lut_bits, domain=cfg.gelu_domain)
-        return y.astype(x.dtype)
-    em = _nl_emulate(q, "gelu")
-    if em == "fixedpoint":
-        return nl.fixedpoint_gelu(x.astype(jnp.float32)).astype(x.dtype)
-    if em == "relu6":
-        return nl.relu6_gelu(x.astype(jnp.float32)).astype(x.dtype)
-    if _nl_on(q, "gelu"):
-        cfg: NonlinearConfig = q.nonlinear
-        f = {"gelu": nl.gelu_value, "silu": nl.silu_value}[kind]
-        return f(x.astype(jnp.float32), cfg, q.act_fmt).astype(x.dtype)
-    return {"gelu": lambda v: jax.nn.gelu(v, approximate=False),
-            "silu": jax.nn.silu}[kind](x)
+    return q.datapath.act(x, kind, q=q)
 
 
 def softmax(x: jnp.ndarray, q: QuantConfig, axis: int = -1) -> jnp.ndarray:
-    if _nl_kernel(q, "softmax") and axis in (-1, x.ndim - 1):
-        from repro.kernels import ops
-        y = ops.mxint_softmax_op(
-            x.astype(jnp.float32), act_block=q.act_fmt.block_size,
-            mant_bits=q.act_fmt.mant_bits,
-            r_bits=q.nonlinear.softmax_r_bits, quantize_out=True)
-        return y.astype(x.dtype)
-    if _nl_emulate(q, "softmax") in ("fixedpoint", "relu6"):
-        return nl.fixedpoint_softmax(x.astype(jnp.float32),
-                                     axis=axis).astype(x.dtype)
-    if _nl_on(q, "softmax"):
-        y = nl.softmax_value(x.astype(jnp.float32), q.nonlinear, q.act_fmt,
-                             axis=axis)
-        return y.astype(x.dtype)
-    return jax.nn.softmax(x, axis=axis)
+    return q.datapath.softmax(x, q=q, axis=axis)
 
 
 # ---------------------------------------------------------------------------
@@ -252,15 +148,43 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # FFN
 # ---------------------------------------------------------------------------
-def ffn(x: jnp.ndarray, p, kind: str, q: QuantConfig) -> jnp.ndarray:
-    """p: dict with wi/wg/wo (gated) or wi/wo (plain)."""
+def ffn(x: jnp.ndarray, p, kind: str, q: QuantConfig, prenorm=None,
+        eps: float = 1e-6) -> jnp.ndarray:
+    """p: dict with wi/wg/wo (gated) or wi/wo (plain).
+
+    ``prenorm``: optional ('ln'|'rms', gamma, beta) — the block's pre-FFN
+    norm, folded into the input linears via the ``layernorm_linear``
+    composite when the backend provides it (beta is None for 'rms').
+    Without a composite the norm runs once up front — the classic two-op
+    block, bit-identical by the composite contract.
+    """
+    _in_ws = [p["wi"], p["wg"]] if kind in ("swiglu", "geglu") else \
+        ([p["wi"]] if kind == "gelu" else [])
+    if prenorm is not None and not all(
+            q.datapath.fuses_norm_linear(q, x, w) for w in _in_ws):
+        # no fusion for EVERY input linear this norm feeds (config,
+        # sharding or compiled-TPU tiling): normalize ONCE — a partial
+        # answer would replay the norm inside the declining linears'
+        # fallbacks
+        nk, g, b_ = prenorm
+        x = (rmsnorm(x, g, q=q, eps=eps) if nk == "rms"
+             else layernorm(x, g, b_, q=q, eps=eps))
+        prenorm = None
+
+    def in_linear(w, b=None):
+        if prenorm is None:
+            return linear(x, w, b, q=q)
+        nk, g, b_ = prenorm
+        return layernorm_linear(x, g, b_, w, b, q=q, eps=eps,
+                                rms_only=(nk == "rms"))
+
     if kind in ("swiglu", "geglu"):
         act = "silu" if kind == "swiglu" else "gelu"
-        up = linear(x, p["wi"], q=q)
-        gate = act_fn(linear(x, p["wg"], q=q), act, q)
+        up = in_linear(p["wi"])
+        gate = act_fn(in_linear(p["wg"]), act, q)
         return linear(up * gate, p["wo"], q=q)
     elif kind == "gelu":
-        h = act_fn(linear(x, p["wi"], p.get("bi"), q=q), "gelu", q)
+        h = act_fn(in_linear(p["wi"], p.get("bi")), "gelu", q)
         return linear(h, p["wo"], p.get("bo"), q=q)
     elif kind == "none":
         return jnp.zeros_like(x)

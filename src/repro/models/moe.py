@@ -115,12 +115,7 @@ def moe_ffn(x: jnp.ndarray, p: Dict[str, Param], cfg: ModelConfig, *,
 
     # ---- expert computation (E/f sharded over 'model': EP/TP) -------------
     def expert_mm(h, w: Param, pattern: str):
-        wv = w.value
-        if hasattr(wv, "mantissa"):
-            from repro.core.quantize import dequantize
-            wv = dequantize(wv, dtype=h.dtype)
-        else:
-            wv = L._maybe_qdq_weight(wv, quant).astype(h.dtype)
+        wv = quant.datapath.weight_value(w.value, q=quant, dtype=h.dtype)
         return jnp.einsum(pattern, h, wv)
 
     up = expert_mm(buf, p["wi"], "Xecd,edf->Xecf")

@@ -168,13 +168,9 @@ def _mlstm_gates(p, x, quant):
     log_f = -jax.nn.softplus(-f_logit)               # log sigmoid(f) <= 0
     i_logit = L.linear(x, p["w_i"], q=quant).astype(jnp.float32)
     log_i = jnp.minimum(i_logit, 0.0)                # stabilized exp gate
-    if quant.enabled and quant.quantize_nonlinear and \
-            quant.mode in ("sim", "packed") and "softmax" in quant.nl_ops:
-        from repro.core.nonlinear import exp_datapath
-        _LOG2E = 1.4426950408889634
-        i_gate = exp_datapath(log_i * _LOG2E, quant.nonlinear.softmax_r_bits)
-    else:
-        i_gate = jnp.exp(log_i)
+    # backend exp: the mxint_sim datapath runs the Eq. 14-19 pow2 LUT when
+    # softmax non-linearities are quantized; float e^x everywhere else
+    i_gate = quant.datapath.exp(log_i, q=quant)
     return log_f, i_gate
 
 

@@ -83,20 +83,26 @@ def apply_block(p, kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
                 cache_index=None, decode: bool = False):
     """Pre-norm residual block.  Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
-    h = L.rmsnorm(x, p["ln1"], q=quant, eps=cfg.norm_eps)
     if kind == "attn":
+        # the pre-attention norm rides into the q/k/v projections via the
+        # layernorm_linear composite seam (fused when the backend provides
+        # it, norm-then-linear otherwise — DESIGN.md §12)
         window = cfg.local_attn_window or cfg.window
         o, new_cache = A.attention(
-            p["mix"], h, cfg, quant=quant, positions=positions,
-            cache=cache, cache_index=cache_index, window=window)
+            p["mix"], x, cfg, quant=quant, positions=positions,
+            cache=cache, cache_index=cache_index, window=window,
+            prenorm=("rms", p["ln1"], None))
     elif kind == "rec":
+        h = L.rmsnorm(x, p["ln1"], q=quant, eps=cfg.norm_eps)
         o, new_cache = R.rglru_block(p["mix"], h, cfg, quant=quant,
                                      state=cache, decode=decode)
     elif kind == "mlstm":
+        h = L.rmsnorm(x, p["ln1"], q=quant, eps=cfg.norm_eps)
         o, new_cache = R.mlstm_block(p["mix"], h, cfg, quant=quant,
                                      state=cache, decode=decode)
         return x + o, new_cache, aux
     elif kind == "slstm":
+        h = L.rmsnorm(x, p["ln1"], q=quant, eps=cfg.norm_eps)
         if decode:
             o, new_cache = R.slstm_step(p["mix"], h, cfg, quant, cache)
         else:
@@ -106,11 +112,12 @@ def apply_block(p, kind: str, x: jnp.ndarray, cfg: ModelConfig, *,
         raise ValueError(kind)
     x = x + o
     if cfg.ffn_kind != "none" and "ffn" in p:
-        h2 = L.rmsnorm(x, p["ln2"], q=quant, eps=cfg.norm_eps)
         if cfg.ffn_kind == "moe":
+            h2 = L.rmsnorm(x, p["ln2"], q=quant, eps=cfg.norm_eps)
             f, aux = M.moe_ffn(h2, p["ffn"], cfg, quant=quant)
         else:
-            f = L.ffn(h2, p["ffn"], cfg.ffn_kind, quant)
+            f = L.ffn(x, p["ffn"], cfg.ffn_kind, quant,
+                      prenorm=("rms", p["ln2"], None), eps=cfg.norm_eps)
         x = x + f
     return x, new_cache, aux
 

@@ -107,15 +107,17 @@ class ViT:
         x = x + params["pos_embed"].value.astype(x.dtype)[None]
 
         def block(x, bp):
-            h = L.layernorm(x, bp["ln1_g"], bp["ln1_b"], q=quant,
-                            eps=cfg.norm_eps)
-            o, _ = A.attention(bp["attn"], h, cfg, quant=quant,
+            # pre-norms ride into the consuming linears through the
+            # layernorm_linear composite seam: fused LN->qkv / LN->wi in
+            # kernel mode, norm-then-linear otherwise (DESIGN.md §12)
+            o, _ = A.attention(bp["attn"], x, cfg, quant=quant,
                                positions=jnp.arange(x.shape[1])[None, :],
-                               causal=False, use_rope=False)
+                               causal=False, use_rope=False,
+                               prenorm=("ln", bp["ln1_g"], bp["ln1_b"]))
             x = x + o
-            h2 = L.layernorm(x, bp["ln2_g"], bp["ln2_b"], q=quant,
-                             eps=cfg.norm_eps)
-            return x + L.ffn(h2, bp["ffn"], "gelu", quant), None
+            return x + L.ffn(x, bp["ffn"], "gelu", quant,
+                             prenorm=("ln", bp["ln2_g"], bp["ln2_b"]),
+                             eps=cfg.norm_eps), None
 
         if cfg.remat in ("block", "full"):
             block = jax.checkpoint(block)

@@ -10,8 +10,10 @@ format.  The serving dry-run lowers with these packed leaves, so
 (mantissa and exponent planes with the same PartitionSpec — they shard
 together by construction) and every linear runs ``mxint_linear`` on its
 local planes under ``shard_map``, bit-identical to the single-device
-kernel/sim path (DESIGN.md §10).  Continuous batching for classification
-lives in ``repro.serving.scheduler.ClassifyScheduler`` (DESIGN.md §7).
+kernel/sim path (DESIGN.md §10).  A 'data' mesh axis composes: batch
+rows shard over it (trivially bit-exact) so one engine scales both TP
+and DP (DESIGN.md §12).  Continuous batching for classification lives
+in ``repro.serving.scheduler.ClassifyScheduler`` (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -241,6 +243,16 @@ class ViTServingEngine:
     sharded forward is BIT-IDENTICAL to the single-device ``mode='sim'``
     oracle (asserted by tests/test_sharded_serving.py; design and
     exactness argument in DESIGN.md §10).
+
+    Data parallelism composes: a mesh with a 'data' axis (e.g.
+    ``repro.launch.mesh.make_serving_mesh(dp, tp)``) additionally shards
+    the BATCH dimension — each data shard classifies ``batch/dp`` images
+    through the full (model-sharded) forward.  Batch rows are
+    independent everywhere in the datapath (row-wise quantizer blocks,
+    per-row norms/softmax), so data sharding is trivially bit-exact and
+    one engine scales both TP and DP (DESIGN.md §10/§12).  Requires
+    ``serve_cfg.batch % dp == 0``; the params stay replicated over
+    'data' (their PartitionSpecs name only 'model').
     """
 
     def __init__(self, model, params, serve_cfg: ServeConfig, mesh=None):
@@ -248,12 +260,17 @@ class ViTServingEngine:
         self.cfg = serve_cfg
         self.mesh = mesh
         tp = mesh.shape.get("model", 1) if mesh is not None else 1
-        if tp > 1:
+        dp = mesh.shape.get("data", 1) if mesh is not None else 1
+        if tp > 1 or dp > 1:
             if not serve_cfg.pack_weights:
                 raise ValueError("sharded serving shards the PACKED planes; "
                                  "set ServeConfig(pack_weights=True)")
+            if serve_cfg.batch % dp:
+                raise ValueError(
+                    f"data sharding needs batch % dp == 0, got "
+                    f"batch={serve_cfg.batch} dp={dp}")
             self.params, self._logits = self._build_sharded(
-                model, params, serve_cfg, mesh, tp)
+                model, params, serve_cfg, mesh, tp, dp)
             return
         if serve_cfg.pack_weights:
             params = pack_params_mxint(params, serve_cfg.weight_fmt)
@@ -261,7 +278,8 @@ class ViTServingEngine:
         self._logits = jax.jit(model.logits)
 
     @staticmethod
-    def _build_sharded(model, params, serve_cfg: ServeConfig, mesh, tp: int):
+    def _build_sharded(model, params, serve_cfg: ServeConfig, mesh, tp: int,
+                       dp: int = 1):
         """Pack -> mark/shard planes -> device_put -> shard_map'd jit."""
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.parallel.sharding import (shard_map_compat,
@@ -274,7 +292,16 @@ class ViTServingEngine:
             # shard boundaries.  Column-parallel never splits blocks, so
             # packing stays byte-identical to the single-device engine.
             tp_shards=tp if strategy == "row" else 1)
-        marked, specs = tp_shard_packed_params(packed, tp, "model", strategy)
+        if tp > 1:
+            marked, specs = tp_shard_packed_params(packed, tp, "model",
+                                                   strategy)
+        else:
+            # data-only mesh: planes stay whole and replicated (marking
+            # them for a 1-way 'model' axis would emit collectives over
+            # an axis the mesh may not even carry)
+            marked = packed
+            specs = jax.tree_util.tree_map(lambda p: P(), packed,
+                                           is_leaf=is_param)
 
         def put(p: Param, spec) -> Param:
             ns = NamedSharding(mesh, spec)
@@ -287,8 +314,13 @@ class ViTServingEngine:
             return Param(v, p.axes)
 
         placed = jax.tree_util.tree_map(put, marked, specs, is_leaf=is_param)
+        # batch sharding over 'data' (replicated when the mesh has no data
+        # axis): every data shard runs the identical model-sharded forward
+        # on its batch/dp rows
+        img_spec = P("data") if dp > 1 else P()
         fwd = shard_map_compat(lambda p, imgs: model.logits(p, imgs),
-                               mesh, in_specs=(specs, P()), out_specs=P())
+                               mesh, in_specs=(specs, img_spec),
+                               out_specs=img_spec)
         return placed, jax.jit(fwd)
 
     def jit_cache_size(self) -> int:

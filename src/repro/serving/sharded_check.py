@@ -20,7 +20,12 @@ Checks, emitted as one JSON object on stdout:
   2. SCHEDULING — a mixed-size request stream through
      ``ClassifyScheduler`` sustains a fixed-shape jit: after the warmup
      batch, the jit cache stays at ONE specialization.
-  3. --bench — off/sim/kernel(1 dev)/kernel(sharded) wall-clocks of the
+  3. --dp N — the mesh grows a 'data' axis: batch rows shard over N data
+     shards COMPOSED with the 'model' TP shards (one engine scales both
+     axes).  Batch sharding is trivially bit-exact, so the same bitwise
+     parity assertions run against the dp x tp engine, plus a dp-only
+     (tp=1) engine when enough devices exist.
+  4. --bench — off/sim/kernel(1 dev)/kernel(sharded) wall-clocks of the
      same forward, consumed by benchmarks/kernel_bench.py.
 """
 import argparse
@@ -35,7 +40,7 @@ import numpy as np
 
 from repro.configs.deit import DEIT_TINY
 from repro.core.mx_types import QuantConfig
-from repro.launch.mesh import make_tp_mesh
+from repro.launch.mesh import make_serving_mesh, make_tp_mesh
 from repro.models import build_model
 from repro.serving.engine import ServeConfig, ViTServingEngine
 from repro.serving.scheduler import ClassifyRequest, ClassifyScheduler
@@ -138,6 +143,8 @@ def bench_rows(m_sim, m_ker, params, mesh, batch: int, image_size: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--tp", type=int, default=2, help="model-axis shards")
+    ap.add_argument("--dp", type=int, default=1, help="data-axis shards "
+                    "(batch sharding composed with TP)")
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--classes", type=int, default=100)
     ap.add_argument("--batch", type=int, default=4)
@@ -145,23 +152,32 @@ def main(argv=None):
                     help="also time off/sim/kernel/sharded forwards")
     args = ap.parse_args(argv)
 
-    mesh = make_tp_mesh(args.tp)
+    mesh = (make_serving_mesh(args.dp, args.tp) if args.dp > 1
+            else make_tp_mesh(args.tp))
     cfg, m_sim, m_ker, params = _models(args.layers, args.classes)
     report = {
         "devices": jax.device_count(),
         "tp": args.tp,
+        "dp": args.dp,
         "arch": f"deit_tiny_L{args.layers}",
         "parity": parity_check(m_sim, m_ker, params, mesh, args.batch,
                                cfg.image_size),
         "scheduler": scheduler_check(m_ker, params, mesh, args.batch,
                                      cfg.image_size),
     }
-    if args.bench:
-        report["bench_ms"] = bench_rows(m_sim, m_ker, params, mesh,
-                                        args.batch, cfg.image_size)
     ok = (report["parity"]["column"]["bit_exact"] and
           report["scheduler"]["all_classified"] and
           report["scheduler"]["recompiles_after_warmup"] == 0)
+    if args.dp > 1:
+        # data-only engine (tp=1): batch shards, planes replicated — the
+        # minimal 'data' axis configuration must be bit-exact too
+        dp_mesh = make_serving_mesh(args.dp, 1)
+        report["parity_dp_only"] = parity_check(
+            m_sim, m_ker, params, dp_mesh, args.batch, cfg.image_size)
+        ok = ok and report["parity_dp_only"]["column"]["bit_exact"]
+    if args.bench:
+        report["bench_ms"] = bench_rows(m_sim, m_ker, params, mesh,
+                                        args.batch, cfg.image_size)
     report["ok"] = bool(ok)
     print(json.dumps(report))
     return 0 if ok else 1

@@ -233,18 +233,22 @@ class TestDirectBranchRaggedPositions:
 class TestKernelModeConsumesPackedPlanes:
     def test_no_dequantize_in_traced_program(self, monkeypatch):
         """mxint_linear eats the int8 planes: tracing the kernel-mode
-        forward never calls `dequantize` (the packed-mode XLA path does)."""
+        forward never calls `dequantize` (the packed-mode XLA path does).
+        The spy sits on repro.core.quantize — the module attribute the
+        datapath backends resolve at call time."""
+        import importlib
+        Q = importlib.import_module("repro.core.quantize")
         m_sim, m_ker, params, packed = _models(DEIT_MICRO, n_classes=10)
         imgs = _images(1, DEIT_MICRO.image_size)
 
         calls = []
-        orig = L.dequantize
+        orig = Q.dequantize
 
         def spy(*a, **k):
             calls.append(1)
             return orig(*a, **k)
 
-        monkeypatch.setattr(L, "dequantize", spy)
+        monkeypatch.setattr(Q, "dequantize", spy)
         jaxpr = jax.make_jaxpr(m_ker.logits)(packed, imgs)
         assert not calls, "kernel mode must not dequantize packed weights"
         assert "pallas_call" in str(jaxpr)

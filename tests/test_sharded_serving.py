@@ -23,9 +23,10 @@ pytestmark = pytest.mark.slow    # subprocess + forced multi-device jax init (fa
 ROOT = Path(__file__).resolve().parents[1]
 
 
-def _run_check(extra=()):
+def _run_check(extra=(), devices=2):
     env = dict(os.environ)
-    env["REPRO_XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["REPRO_XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = str(ROOT / "src")
     proc = subprocess.run(
         [sys.executable, "-m", "repro.serving.sharded_check", *extra],
@@ -51,4 +52,31 @@ def test_sharded_kernel_bit_exact_and_zero_recompiles():
     assert sched["all_classified"]
     assert sched["requests"] == 7
     assert sched["jit_cache_after_warmup"] == 1
+    assert sched["recompiles_after_warmup"] == 0
+
+
+def test_data_axis_composes_with_model_tp():
+    """ROADMAP "Data-axis serving shards": a ("data", "model") mesh shards
+    the batch over 2 data shards COMPOSED with 2-way model TP (4 forced
+    host devices).  Batch rows are independent through the whole MXInt
+    datapath, so both the composed dp x tp engine and the dp-only engine
+    stay BIT-IDENTICAL to the single-device sim oracle, and the
+    ClassifyScheduler stream still never recompiles."""
+    rep = _run_check(["--dp", "2", "--tp", "2"], devices=4)
+    assert rep["devices"] >= 4
+    assert rep["ok"]
+    assert rep["dp"] == 2
+
+    # composed dp x tp column engine: bitwise vs single-device sim
+    assert rep["parity"]["column"]["bit_exact"]
+    assert rep["parity"]["column"]["max_abs_diff"] == 0.0
+    # row/psum still runs under the data axis (close, not bit-exact)
+    assert rep["parity"]["row"]["max_abs_diff"] < 1.0
+
+    # dp-only (tp=1) engine: batch sharding alone is bit-exact too
+    assert rep["parity_dp_only"]["column"]["bit_exact"]
+
+    # continuous batching composes with the data axis: one specialization
+    sched = rep["scheduler"]
+    assert sched["all_classified"]
     assert sched["recompiles_after_warmup"] == 0

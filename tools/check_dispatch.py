@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Dispatch-seam check: mode branching only inside ``repro/datapath/``.
+
+The execution-backend redesign (DESIGN.md §12) moved every
+``QuantConfig.mode`` decision behind the ``q.datapath`` backend object;
+``models/``, ``kernels/``, ``serving/`` must never again branch on the
+mode string, or the pluggable seam silently regrows into per-op
+if-chains.  This tool scans ``src/`` for
+
+    ``.mode ==`` / ``.mode !=`` / ``.mode in`` / ``.mode not in``
+    and bare ``mode in (...)`` membership tests
+
+and fails unless the line lives in ``src/repro/datapath/`` (backends may
+branch) or ``src/repro/core/mx_types.py`` (mode validation + backend
+resolution).  The attribute rule is deliberately TOTAL: any ``.mode``
+token outside the seam is flagged — reversed comparisons
+(``"kernel" == q.mode``), ``q.mode.startswith(...)``, ``match q.mode:``
+and dict-dispatch ``{...}[q.mode]`` all require writing ``.mode``, so
+none can evade the guard (nothing outside the seam has a legitimate
+read of the mode string; identifiers merely ENDING in "mode" —
+``tp_mode``, ``exp_mode`` — are untouched).  Run from the repo root (CI
+does; tests/test_datapath.py runs it in tier-1)::
+
+    python tools/check_dispatch.py
+
+Also importable: ``check(root) -> list[str]`` returns the problems.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# ANY attribute named exactly `mode` (covers ==/!=/in, reversed forms,
+# .startswith, match statements, dict dispatch — all must spell `.mode`)
+ATTR_BRANCH = re.compile(r"\.mode\b")
+# bare membership: `mode in (`, not `tp_mode in (` / `exp_mode in (`
+BARE_BRANCH = re.compile(r"(?<![\w.])mode\s+(?:not\s+)?in\s*\(")
+
+ALLOWED = ("src/repro/datapath/", "src/repro/core/mx_types.py")
+
+
+def check(root: Path) -> list:
+    problems = []
+    for py in sorted((root / "src").rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        rel = py.relative_to(root).as_posix()
+        if any(rel.startswith(a) for a in ALLOWED):
+            continue
+        for i, line in enumerate(py.read_text().splitlines(), 1):
+            if ATTR_BRANCH.search(line) or BARE_BRANCH.search(line):
+                problems.append(
+                    f"{rel}:{i} touches a quant mode string outside "
+                    f"repro/datapath/: {line.strip()!r} — dispatch through "
+                    f"q.datapath instead (DESIGN.md §12)")
+    return problems
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parents[1]
+    problems = check(root)
+    for p in problems:
+        print(f"check_dispatch: {p}", file=sys.stderr)
+    if not problems:
+        print("check_dispatch: no mode branching outside repro/datapath/")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""repro.analysis — static kernel-contract + trace-invariant checking
+(DESIGN.md §13).
+
+Three passes over the MXInt datapath's load-bearing invariants:
+
+* :mod:`repro.analysis.kernel_contracts` — abstract-eval capture of
+  every ``pallas_call`` (VMEM budget, tile alignment, index-map
+  coverage, scratch-dtype contracts) over the kernel_bench shape sweep.
+* :mod:`repro.analysis.trace_lint` — jaxpr allow/deny lists per datapath
+  mode (no float softmax/f64 outside ``pallas_call`` in kernel mode, no
+  ``pallas_call`` in XLA modes, per-block pallas budgets).
+* :mod:`repro.analysis.source_rules` — AST rules (single NEG_INF
+  sentinel, no bare float nonlinears in ``models/``, no
+  ``interpret=True`` literals in ``src/``).
+
+Importing this package registers every rule; run them with
+``tools/repro_lint.py`` (CI) or :func:`repro.analysis.run_rules`
+(tier-1 via ``tests/test_analysis.py``).
+"""
+from repro.analysis.registry import (ERROR, WARN, Rule, Violation,
+                                     get_rule, register_rule, rules,
+                                     run_rules)
+from repro.analysis import kernel_contracts, source_rules, trace_lint
+from repro.analysis import fixtures
+
+__all__ = [
+    "ERROR", "WARN", "Rule", "Violation", "get_rule", "register_rule",
+    "rules", "run_rules", "kernel_contracts", "source_rules",
+    "trace_lint", "fixtures",
+]

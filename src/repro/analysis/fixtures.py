@@ -1,0 +1,160 @@
+"""Deliberately violating fixtures — the analysis passes' self-tests.
+
+Each fixture is a callable returning the violations its pass reports for
+a KNOWN-BAD input; ``tests/test_analysis.py`` asserts every fixture
+fires (non-empty, right rule name) and ``tools/repro_lint.py --fixture
+NAME`` exits non-zero on each, which is the acceptance contract: a rule
+that cannot flag its own counterexample is dead code, not a guarantee.
+
+The kernel fixtures go through the REAL capture machinery (a fabricated
+``pallas_call`` under abstract eval), not hand-built capture records, so
+they also pin the recorder itself.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.kernel_contracts import (capture_pallas_calls,
+                                             check_captures)
+from repro.analysis.registry import ERROR, Violation
+from repro.analysis.source_rules import check_source
+from repro.analysis.trace_lint import (KERNEL_NL_DENY, TraceRules, lint_fn)
+
+
+def _noop_kernel(*refs):
+    pass
+
+
+def _capture_2d(shape, block, *, out_block=None, grid=None,
+                index_map=None, out_index_map=None, dtype=jnp.float32,
+                kernel=_noop_kernel, scratch=()):
+    """Fabricate one 2-D pallas_call capture with the given specs."""
+    from jax.experimental import pallas as pl
+
+    grid = grid or tuple(d // b for d, b in zip(shape, block))
+    index_map = index_map or (lambda i, j: (i, j))
+    out_index_map = out_index_map or index_map
+    out_block = out_block or block
+
+    def fn(x):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec(block, index_map)],
+            out_specs=pl.BlockSpec(out_block, out_index_map),
+            out_shape=jax.ShapeDtypeStruct(shape, dtype),
+            scratch_shapes=list(scratch),
+            interpret=True)(x)
+
+    return capture_pallas_calls(fn, jax.ShapeDtypeStruct(shape, dtype),
+                                label="fixture")
+
+
+def vmem_over_budget() -> List[Violation]:
+    """A (2048, 2048) f32 block is 16 MiB; double-buffered in+out blows
+    the whole per-core budget several times over."""
+    return check_captures(_capture_2d((4096, 2048), (2048, 2048)))
+
+
+def misaligned_tile() -> List[Violation]:
+    """Minormost tiled block of 100 lanes (not a 128 multiple)."""
+    return check_captures(_capture_2d((64, 400), (8, 100)))
+
+
+def uncovered_output_block() -> List[Violation]:
+    """A constant output index map over a tiled output: 3 of 4 row-blocks
+    of the result are never written."""
+    return check_captures(_capture_2d(
+        (512, 128), (128, 128), grid=(4,),
+        index_map=lambda i: (i, 0), out_index_map=lambda i: (0, 0)))
+
+
+def wrong_scratch_dtype() -> List[Violation]:
+    """A kernel posing as mxint_ln_matmul whose LN scratch is f32 while
+    the model dtype is bf16 — the model-dtype scratch contract."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _mxint_ln_matmul_kernel(*refs):
+        pass
+
+    return check_captures(_capture_2d(
+        (128, 256), (128, 256), dtype=jnp.bfloat16,
+        kernel=_mxint_ln_matmul_kernel,
+        scratch=(pltpu.VMEM((128, 256), jnp.float32),)))
+
+
+def float_softmax_in_kernel_trace() -> List[Violation]:
+    """jax.nn.softmax traced under kernel-mode rules: denied rank-2 exp,
+    a structural softmax chain, and a blown (>=1) pallas budget."""
+    rules = TraceRules(deny_outside_pallas=KERNEL_NL_DENY,
+                       forbid_softmax_chain=True, pallas_budget=(1, 1))
+    return lint_fn(lambda x: jax.nn.softmax(x, axis=-1),
+                   (jnp.zeros((8, 16), jnp.float32),), rules,
+                   "fixture:float-softmax")
+
+
+def f64_leak() -> List[Violation]:
+    """An f64 upcast mid-trace (x64 enabled only inside the fixture —
+    the default f32 canonicalisation would silently hide the leak)."""
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        return lint_fn(
+            lambda x: (x.astype(jnp.float64) * 2.0).astype(jnp.float32),
+            (jnp.zeros((4, 4), jnp.float32),), TraceRules(),
+            "fixture:f64-leak")
+
+
+def raw_neg_inf_literal() -> List[Violation]:
+    return check_source(
+        "MASK_VALUE = -2.0e38\n",
+        "src/repro/models/bad_sentinel.py")
+
+
+def exp_in_models() -> List[Violation]:
+    return check_source(
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return jnp.exp(x)\n",
+        "src/repro/models/bad_exp.py")
+
+
+def interpret_literal_in_src() -> List[Violation]:
+    return check_source(
+        "def f(q, k, v, flash):\n"
+        "    return flash(q, k, v, interpret=True)\n",
+        "src/repro/serving/bad_interpret.py")
+
+
+FIXTURES: Dict[str, Callable[[], List[Violation]]] = {
+    "vmem-over-budget": vmem_over_budget,
+    "misaligned-tile": misaligned_tile,
+    "uncovered-output-block": uncovered_output_block,
+    "wrong-scratch-dtype": wrong_scratch_dtype,
+    "float-softmax-kernel-trace": float_softmax_in_kernel_trace,
+    "f64-leak": f64_leak,
+    "raw-neg-inf-literal": raw_neg_inf_literal,
+    "exp-in-models": exp_in_models,
+    "interpret-literal-in-src": interpret_literal_in_src,
+}
+
+# the rule each fixture must trip (self-test assertion)
+FIXTURE_RULES: Dict[str, str] = {
+    "vmem-over-budget": "kernel-contracts",
+    "misaligned-tile": "kernel-contracts",
+    "uncovered-output-block": "kernel-contracts",
+    "wrong-scratch-dtype": "kernel-contracts",
+    "float-softmax-kernel-trace": "trace-invariants",
+    "f64-leak": "trace-invariants",
+    "raw-neg-inf-literal": "neg-inf-literal",
+    "exp-in-models": "models-float-nonlinear",
+    "interpret-literal-in-src": "interpret-literal",
+}
+
+
+def run_fixture(name: str) -> List[Violation]:
+    errors = [v for v in FIXTURES[name]() if v.severity == ERROR]
+    return errors

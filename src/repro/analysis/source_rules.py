@@ -1,0 +1,177 @@
+"""AST source rules: repo-specific lint the generic linters can't know
+(DESIGN.md §13).
+
+Three rules, all suppressible per line with::
+
+    # repro-lint: allow[rule-name] <reason>
+
+on the offending line or the line directly above it (the reason is
+mandatory by convention — a suppression without one fails review, not
+this tool).
+
+``neg-inf-literal``
+    The masking sentinel has exactly one definition
+    (``repro.core.mx_types.NEG_INF``); any other ``-2.0e38`` float
+    literal is a fork of the padding contract that the Eq. 2-3 score
+    quantisation depends on bit-for-bit.
+
+``models-float-nonlinear``
+    ``models/`` must route exp/softmax/gelu/silu through the datapath
+    seam (``L.softmax``, ``dp.act``, ``dp.exp``) so every backend keeps
+    its numerics pluggable.  Documented float-by-design sites:
+    the chunked attention cores in ``models/attention.py`` (the XLA
+    backends' own execution bodies, dispatched *to* by the seam) and
+    ``models/recurrent.py`` (float gate/decay algebra is those archs'
+    spec; their quantised seam is the single ``datapath.exp`` gate).
+
+``interpret-literal``
+    ``interpret=True`` hardcoded at a call site inside ``src/`` pins a
+    kernel to interpret mode in library code; the backend gate
+    (``ops._interpret()``) is the only switch.  Tests and benchmarks may
+    pin it freely.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.registry import Violation, register_rule
+from repro.core.mx_types import NEG_INF as _NEG_INF_SENTINEL
+
+SUPPRESS_TOKEN = "repro-lint: allow["
+
+NEG_INF_VALUE = abs(_NEG_INF_SENTINEL)   # compare against the real sentinel
+# the single definition site
+NEG_INF_HOME = "src/repro/core/mx_types.py"
+
+FLOAT_NONLINEAR_CALLS = {
+    "jnp.exp", "jax.numpy.exp",
+    "jax.nn.softmax", "jax.nn.gelu", "jax.nn.silu",
+}
+# (path suffix, enclosing function or None=whole file) allowed to spell
+# float nonlinears: the dispatched-to execution bodies themselves
+FLOAT_NONLINEAR_ALLOWED: Tuple[Tuple[str, Optional[str]], ...] = (
+    ("repro/models/attention.py", "_q_chunked_attention"),
+    ("repro/models/attention.py", "_chunked_attention"),
+    ("repro/models/recurrent.py", None),
+)
+
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+MODELS_PREFIX = "src/repro/models/"
+INTERPRET_SCAN_PREFIX = "src/"
+# the contract sweep mirrors wrapper kernel configs under abstract eval
+# (pallas_call is swapped for a recorder; the flag never executes)
+INTERPRET_EXEMPT_PREFIX = "src/repro/analysis/"
+
+
+def _suppressed(lines: Sequence[str], lineno: int, rule: str) -> bool:
+    token = f"{SUPPRESS_TOKEN}{rule}]"
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines) and token in lines[ln - 1]:
+            return True
+    return False
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jnp.exp'-style dotted name of a call target, if it is one."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, lines: Sequence[str]):
+        self.relpath = relpath
+        self.lines = lines
+        self.violations: List[Violation] = []
+        self._func_stack: List[str] = []
+
+    # -- helpers ------------------------------------------------------------
+    def _flag(self, rule: str, node: ast.AST, message: str):
+        if not _suppressed(self.lines, node.lineno, rule):
+            self.violations.append(Violation(
+                rule, f"{self.relpath}:{node.lineno}", message))
+
+    def _in_allowed_float_site(self) -> bool:
+        for suffix, func in FLOAT_NONLINEAR_ALLOWED:
+            if not self.relpath.endswith(suffix):
+                continue
+            if func is None or func in self._func_stack:
+                return True
+        return False
+
+    # -- visitors -----------------------------------------------------------
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Constant(self, node):
+        if (isinstance(node.value, float)
+                and abs(node.value) == NEG_INF_VALUE
+                and not self.relpath.endswith(NEG_INF_HOME)):
+            self._flag(
+                "neg-inf-literal", node,
+                "raw -2.0e38 masking literal; import NEG_INF from "
+                "repro.core (single sentinel, DESIGN.md §13)")
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+        if (name in FLOAT_NONLINEAR_CALLS
+                and self.relpath.startswith(MODELS_PREFIX)
+                and not self._in_allowed_float_site()):
+            self._flag(
+                "models-float-nonlinear", node,
+                f"bare {name} in models/ bypasses the datapath seam; "
+                f"route through L.*/q.datapath (DESIGN.md §12)")
+        if (self.relpath.startswith(INTERPRET_SCAN_PREFIX)
+                and not self.relpath.startswith(INTERPRET_EXEMPT_PREFIX)):
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    self._flag(
+                        "interpret-literal", kw.value,
+                        "interpret=True hardcoded in library code; gate "
+                        "on ops._interpret() so TPU runs compile")
+        self.generic_visit(node)
+
+
+def check_source(text: str, relpath: str) -> List[Violation]:
+    """Run the AST rules over one file's source.  ``relpath`` is the
+    repo-relative posix path — rule scoping keys off it."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Violation("source-rules", f"{relpath}:{e.lineno or 0}",
+                          f"unparseable: {e.msg}")]
+    v = _Visitor(relpath, text.splitlines())
+    v.visit(tree)
+    return v.violations
+
+
+@register_rule(
+    "source-rules",
+    "AST rules: single NEG_INF sentinel, no bare float nonlinears in "
+    "models/, no interpret=True literals in src/")
+def run(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.exists():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            if "__pycache__" in py.parts:
+                continue
+            rel = py.relative_to(root).as_posix()
+            out.extend(check_source(py.read_text(), rel))
+    return out

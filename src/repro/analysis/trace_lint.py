@@ -1,0 +1,339 @@
+"""Trace invariant checker: declarative allow/deny lists over jaxprs
+(DESIGN.md §13).
+
+Each target traces a datapath entry point (a backend op, the kernel-mode
+DeiT forward, the kernel-mode decode step) with ``jax.make_jaxpr`` and
+walks the jaxpr RECURSIVELY through ``pjit``/``scan``/``cond`` bodies —
+but never into a ``pallas_call`` body: primitives inside the kernel are
+the datapath working as designed; the same primitive OUTSIDE one is the
+XLA float path leaking back in.  This generalises PR 3's hand-rolled
+"no ``L.softmax`` in the kernel-mode decode trace" spy
+(tests/test_kernel_mode.py), which is now written on top of this pass.
+
+Per-target :class:`TraceRules`:
+
+* ``deny_outside_pallas`` — ``{primitive: min_operand_ndim}``.  The rank
+  floor exists because ``jax.make_jaxpr`` stages primitives even on
+  concrete constants: RoPE's frequency ladder is a legitimate rank-1
+  ``exp`` in every mode, while a score-tensor ``exp`` is always rank >= 2.
+* ``forbid_softmax_chain`` — the structural form of "no float softmax":
+  an ``exp`` fed (within a few hops) by a ``reduce_max`` subtraction
+  whose result feeds a ``reduce_sum`` is a softmax whatever name it was
+  called by.
+* ``forbid_f64`` — no float64/complex128 aval anywhere (the MXInt
+  datapath is f32-and-narrower by construction).
+* ``forbid_pallas`` — XLA-only backends (off/fake/sim/packed) must not
+  lower kernels.
+* ``pallas_budget`` — ``(lo, hi)`` bounds on the number of
+  ``pallas_call`` eqns.  DeiT's transformer blocks run under
+  ``lax.scan``, so the count is per-BLOCK by construction and pins the
+  kernel-fusion structure (3 fused LN->qkv, softmax, wo, fused LN->wi,
+  gelu, wo2).
+* ``allowed_dtypes`` — closed dtype universe for the trace; any aval
+  outside it is an unexpected promotion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.registry import Violation, register_rule
+
+_F64 = ("float64", "complex128")
+
+# backward producers a softmax `exp` input may route through before the
+# reduce_max that stabilises it
+_CHAIN_THROUGH = frozenset({
+    "sub", "add", "mul", "div", "max", "min", "convert_element_type",
+    "broadcast_in_dim", "select_n", "stop_gradient", "reshape",
+    "transpose", "neg"})
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRules:
+    deny_outside_pallas: Tuple[Tuple[str, int], ...] = ()
+    forbid_softmax_chain: bool = False
+    forbid_f64: bool = True
+    forbid_pallas: bool = False
+    pallas_budget: Optional[Tuple[int, int]] = None
+    allowed_dtypes: Optional[FrozenSet[str]] = None
+
+
+# kernel-mode nonlinear rules: the Eq. 14-20 softmax, the LUT gelu and
+# the LN rsqrt must all be inside pallas_call; erf/logistic have no
+# business in ANY kernel-mode trace, exp only below rank 2 (RoPE ladder)
+KERNEL_NL_DENY = (("exp", 2), ("erf", 0), ("erf_inv", 0), ("logistic", 0))
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        vs = list(v) if isinstance(v, (list, tuple)) else [v]
+        for j in vs:
+            if hasattr(j, "jaxpr"):        # ClosedJaxpr
+                yield j.jaxpr
+            elif hasattr(j, "eqns"):       # raw Jaxpr
+                yield j
+
+
+def iter_jaxprs(jaxpr, into_pallas: bool = False):
+    """Yield ``jaxpr`` and every reachable sub-jaxpr scope, skipping
+    pallas_call bodies unless asked."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call" and not into_pallas:
+            continue
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_jaxprs(sub, into_pallas)
+
+
+def iter_eqns(jaxpr, into_pallas: bool = False):
+    for scope in iter_jaxprs(jaxpr, into_pallas):
+        for eqn in scope.eqns:
+            yield eqn
+
+
+def _max_operand_ndim(eqn) -> int:
+    nd = 0
+    for v in eqn.invars:
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "ndim"):
+            nd = max(nd, aval.ndim)
+    return nd
+
+
+def _is_var(v) -> bool:
+    # jaxpr operands are Vars or (unhashable) Literals
+    return type(v).__name__ != "Literal"
+
+
+def _softmax_chains(scope) -> List[str]:
+    """Structural softmax finder within one jaxpr scope (no cross-scope
+    dataflow: jax.nn.softmax and hand-rolled variants inline into one)."""
+    producer = {}
+    for eqn in scope.eqns:
+        for ov in eqn.outvars:
+            if _is_var(ov):
+                producer[ov] = eqn
+    consumers: Dict[object, List] = {}
+    for eqn in scope.eqns:
+        for iv in eqn.invars:
+            if _is_var(iv):
+                consumers.setdefault(iv, []).append(eqn)
+    found = []
+    for eqn in scope.eqns:
+        if eqn.primitive.name != "exp":
+            continue
+        # backward: reduce_max within a few producer hops?
+        saw_max = False
+        frontier = list(eqn.invars)
+        for _ in range(4):
+            nxt = []
+            for v in frontier:
+                if not _is_var(v):
+                    continue
+                p = producer.get(v)
+                if p is None:
+                    continue
+                if p.primitive.name == "reduce_max":
+                    saw_max = True
+                elif p.primitive.name in _CHAIN_THROUGH:
+                    nxt.extend(p.invars)
+            frontier = nxt
+            if saw_max or not frontier:
+                break
+        if not saw_max:
+            continue
+        # forward: does the exp feed a reduce_sum (normaliser)?
+        frontier = list(eqn.outvars)
+        for _ in range(4):
+            nxt = []
+            for v in frontier:
+                for c in consumers.get(v, ()):
+                    if c.primitive.name == "reduce_sum":
+                        found.append(
+                            "exp(x - max) ... reduce_sum: float softmax "
+                            "shape outside pallas_call")
+                        frontier = []
+                        nxt = []
+                        break
+                    if c.primitive.name in _CHAIN_THROUGH:
+                        nxt.extend(c.outvars)
+                else:
+                    continue
+                break
+            if not nxt:
+                break
+            frontier = nxt
+    return found
+
+
+def lint_jaxpr(closed_jaxpr, rules: TraceRules, label: str) -> List[Violation]:
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    out: List[Violation] = []
+    deny = dict(rules.deny_outside_pallas)
+    n_pallas = 0
+    seen_denied = set()
+    bad_dtypes = set()
+    saw_f64 = False
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            n_pallas += 1
+        if name in deny and _max_operand_ndim(eqn) >= deny[name]:
+            key = (name, _max_operand_ndim(eqn))
+            if key not in seen_denied:
+                seen_denied.add(key)
+                out.append(Violation(
+                    "trace-invariants", label,
+                    f"denied primitive '{name}' (operand rank "
+                    f"{_max_operand_ndim(eqn)}) outside pallas_call"))
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None:
+                continue
+            if rules.forbid_f64 and str(dt) in _F64 and not saw_f64:
+                saw_f64 = True
+                out.append(Violation(
+                    "trace-invariants", label,
+                    f"f64 leak: {name} touches a {dt} value"))
+            if (rules.allowed_dtypes is not None
+                    and str(dt) not in rules.allowed_dtypes
+                    and str(dt) not in bad_dtypes):
+                bad_dtypes.add(str(dt))
+                out.append(Violation(
+                    "trace-invariants", label,
+                    f"unexpected dtype promotion: {name} touches {dt} "
+                    f"(allowed: {sorted(rules.allowed_dtypes)})"))
+    if rules.forbid_softmax_chain:
+        for scope in iter_jaxprs(jaxpr):
+            for msg in _softmax_chains(scope):
+                out.append(Violation("trace-invariants", label, msg))
+    if rules.forbid_pallas and n_pallas:
+        out.append(Violation(
+            "trace-invariants", label,
+            f"{n_pallas} pallas_call(s) in an XLA-only backend trace"))
+    if rules.pallas_budget is not None:
+        lo, hi = rules.pallas_budget
+        if not (lo <= n_pallas <= hi):
+            out.append(Violation(
+                "trace-invariants", label,
+                f"pallas_call count {n_pallas} outside budget "
+                f"[{lo}, {hi}] — a kernel was dropped from or duplicated "
+                f"in the fused structure"))
+    return out
+
+
+def lint_fn(fn, args, rules: TraceRules, label: str) -> List[Violation]:
+    return lint_jaxpr(jax.make_jaxpr(fn)(*args), rules, label)
+
+
+# ---------------------------------------------------------------------------
+# built-in targets
+# ---------------------------------------------------------------------------
+# DeiT-Micro kernel mode, 1 layer (blocks run under lax.scan, so the
+# pallas budget counts per BLOCK): patch linear, 3 fused LN->qkv
+# projections, whole-row softmax, wo, fused LN->wi, gelu, wo2, final LN,
+# classifier head = 11.
+_DEIT_PALLAS_BUDGET = (11, 11)
+_DEIT_DTYPES = frozenset({"bool", "float32", "int32", "int8"})
+
+
+def _deit_kernel_target() -> List[Violation]:
+    import dataclasses as dc
+
+    from repro.configs.deit import DEIT_MICRO
+    from repro.core.mx_types import QuantConfig
+    from repro.models import build_model
+    from repro.serving.engine import pack_params_mxint
+
+    kq = QuantConfig(mode="kernel", quantize_nonlinear=True)
+    cfg = dc.replace(DEIT_MICRO, n_layers=1, n_classes=10, quant=kq)
+    sim_cfg = dc.replace(cfg, quant=QuantConfig(mode="sim",
+                                                quantize_nonlinear=True))
+    params = build_model(sim_cfg).init(jax.random.key(0))
+    packed = pack_params_mxint(params, kq.weight_fmt)
+    m = build_model(cfg)
+    imgs = jnp.zeros((1, cfg.image_size, cfg.image_size, 3), jnp.float32)
+    rules = TraceRules(deny_outside_pallas=KERNEL_NL_DENY,
+                       forbid_softmax_chain=True,
+                       pallas_budget=_DEIT_PALLAS_BUDGET,
+                       allowed_dtypes=_DEIT_DTYPES)
+    return lint_fn(lambda p, im: m.logits(p, im), (packed, imgs), rules,
+                   "deit-micro-forward[kernel]")
+
+
+def _decode_kernel_target() -> List[Violation]:
+    from repro.core.mx_types import QuantConfig
+    from repro.models import attention as A
+    from repro.models.model_api import ModelConfig
+
+    kq = QuantConfig(mode="kernel", quantize_nonlinear=True)
+    cfg = ModelConfig(n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=100, ffn_kind="gelu",
+                      dtype=jnp.float32)
+    p = A.init_attn_params(jax.random.key(0), cfg, jnp.float32)
+    x = jnp.zeros((2, 1, 64), jnp.float32)
+    cache = A.init_kv_cache(cfg, 2, 32, 0, jnp.float32)
+    # q/k/v projections + fused decode kernel + wo = 5 pallas calls; the
+    # old XLA scoring path would re-introduce a float softmax chain
+    rules = TraceRules(deny_outside_pallas=KERNEL_NL_DENY,
+                       forbid_softmax_chain=True, pallas_budget=(5, 5))
+    return lint_fn(
+        lambda xv, c: A.attention(p, xv, cfg, quant=kq, cache=c,
+                                  cache_index=jnp.int32(7))[0],
+        (x, cache), rules, "decode-step[kernel]")
+
+
+def _backend_op_targets() -> List[Violation]:
+    """Trace softmax/gelu/layernorm through every registered backend.
+
+    XLA backends must never lower a pallas_call; the kernel backend must
+    lower exactly one per op and keep the float nonlinear primitives out
+    of the surrounding trace."""
+    from repro.core.mx_types import QuantConfig
+    from repro.datapath import backends
+    from repro.models.model_api import Param
+
+    out: List[Violation] = []
+    x = jnp.zeros((32, 64), jnp.float32)
+    gamma = Param(value=jnp.ones((64,), jnp.float32), axes=(None,))
+    beta = Param(value=jnp.zeros((64,), jnp.float32), axes=(None,))
+    for mode in sorted(backends()):
+        q = QuantConfig(mode=mode, quantize_nonlinear=True)
+        dp = q.datapath
+        if mode == "kernel":
+            rules = TraceRules(deny_outside_pallas=KERNEL_NL_DENY,
+                               forbid_softmax_chain=True,
+                               pallas_budget=(1, 1))
+        else:
+            rules = TraceRules(forbid_pallas=True)
+        ops = {
+            "softmax": (lambda v, dp=dp, q=q: dp.softmax(v, q=q), (x,)),
+            "gelu": (lambda v, dp=dp, q=q: dp.act(v, "gelu", q=q), (x,)),
+            "layernorm": (lambda v, dp=dp, q=q: dp.layernorm(
+                v, gamma, beta, q=q), (x,)),
+        }
+        for op, (fn, args) in ops.items():
+            out.extend(lint_fn(fn, args, rules, f"{op}[{mode}]"))
+    return out
+
+
+TARGETS: Tuple[Callable[[], List[Violation]], ...] = (
+    _deit_kernel_target, _decode_kernel_target, _backend_op_targets)
+
+
+@register_rule(
+    "trace-invariants",
+    "jaxpr allow/deny lists per datapath mode (no float softmax/f64 "
+    "outside pallas_call in kernel mode, no pallas_call in XLA modes, "
+    "per-block pallas budgets)")
+def run(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    for target in TARGETS:
+        out.extend(target())
+    return out

@@ -2,8 +2,8 @@
 from repro.core.mx_types import (MXFormat, NonlinearConfig, QuantConfig,
                                  MXINT8_ACT, MXINT8_WEIGHT, MXINT6_WEIGHT,
                                  MXINT6_ACT, MXINT4_WEIGHT, MXINT8_OCP,
-                                 PEAK_FLOPS_BF16, PEAK_FLOPS_INT8, HBM_BW,
-                                 ICI_BW)
+                                 NEG_INF, PEAK_FLOPS_BF16, PEAK_FLOPS_INT8,
+                                 HBM_BW, ICI_BW)
 from repro.core.quantize import (MXTensor, quantize, dequantize,
                                  quantize_dequantize, fake_quant,
                                  requantize_to_max_exponent, pack_weight,
@@ -19,8 +19,8 @@ from repro.core import luts, search, gradient_compression
 __all__ = [
     "MXFormat", "NonlinearConfig", "QuantConfig", "MXTensor",
     "MXINT8_ACT", "MXINT8_WEIGHT", "MXINT6_WEIGHT", "MXINT6_ACT",
-    "MXINT4_WEIGHT", "MXINT8_OCP", "PEAK_FLOPS_BF16", "PEAK_FLOPS_INT8",
-    "HBM_BW", "ICI_BW",
+    "MXINT4_WEIGHT", "MXINT8_OCP", "NEG_INF", "PEAK_FLOPS_BF16",
+    "PEAK_FLOPS_INT8", "HBM_BW", "ICI_BW",
     "quantize", "dequantize", "quantize_dequantize", "fake_quant",
     "requantize_to_max_exponent", "pack_weight", "packed_bytes",
     "mxint_layernorm", "mxint_gelu", "mxint_silu", "mxint_softmax",

@@ -31,6 +31,17 @@ U250_KLUTS = 1728
 U250_BRAM36 = 2688
 U250_URAM = 1280
 
+# ---------------------------------------------------------------------------
+# Masking sentinel — THE single definition (kernels, wrappers and models all
+# import it; tools/repro_lint.py rejects any other -2.0e38 literal).  The
+# Eq. 2-3 score quantization runs on the MASKED tile, so every layer of the
+# stack must fill masked lanes with the exact same value or the shared block
+# exponents (and hence the whole-row bit-exactness guarantee) diverge.
+# Finite rather than -inf: the requantize shift-clamp arithmetic needs
+# ordinary float algebra (inf - inf would NaN the online-softmax rescale).
+# ---------------------------------------------------------------------------
+NEG_INF = -2.0e38
+
 
 @dataclasses.dataclass(frozen=True)
 class MXFormat:

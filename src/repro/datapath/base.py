@@ -174,9 +174,12 @@ class Datapath:
             mask = A.positions_mask(positions, s, kv_len, causal, window)
             return A._direct_attention(qv, k, v, mask[:, None, None], q,
                                        scale)
+        # per-row positions thread into the q-block masks: a left-padded
+        # batch long enough to overflow the direct threshold must mask
+        # exactly like ``positions_mask`` (ISSUE 6 ragged-chunked fix)
         return A._q_chunked_attention(qv, k, v, q_offset=0, causal=causal,
                                       window=window, chunk=chunk,
-                                      scale=scale)
+                                      scale=scale, positions=positions)
 
     def attention_decode(self, qv, ck, cv, valid, *, q, scale: float):
         """Single-position decode over a cache ring.  qv: (b, 1, kv, g, hd);

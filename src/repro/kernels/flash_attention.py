@@ -57,8 +57,9 @@ from repro.kernels.mxint_softmax import exp2_datapath
 _LOG2E = 1.4426950408889634
 # Masking sentinel, unified with models/attention.py and kernels/ops.py.
 # The Eq. 2-3 score quantization runs on the MASKED tile (sim parity), so
-# kernel, wrapper and model must fill with the same value.
-NEG_INF = -2.0e38
+# kernel, wrapper and model must fill with the same value — the single
+# definition lives in core/mx_types.py (re-exported here for kernel code).
+from repro.core.mx_types import NEG_INF
 _NEG_INF = NEG_INF
 # Fill value for wrapper-padding lanes during score quantization: must be
 # (a) too small to ever win an act block's amax against real scores, so a

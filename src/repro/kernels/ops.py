@@ -32,7 +32,7 @@ from repro.kernels.mxint_layernorm import mxint_layernorm as _ln_kernel
 from repro.kernels.mxint_matmul import mxint_matmul as _mm_kernel
 from repro.kernels.mxint_softmax import mxint_softmax as _sm_kernel
 
-_NEG_INF = NEG_INF     # unified sentinel (flash_attention.py is the source)
+_NEG_INF = NEG_INF     # unified sentinel (defined in core/mx_types.py)
 
 # ---------------------------------------------------------------------------
 # flash-attention fallback accounting.  The shape gate is STATIC (python
@@ -175,7 +175,7 @@ def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
                        act_block=act_block, act_mant_bits=act_mant_bits,
                        quantize_act=quantize_act,
                        bm=_pick_block_rows(x2p.shape[0], 128),
-                       bn=128, bk=K, interpret=True)[:rows, :N]
+                       bn=128, bk=K, interpret=interp)[:rows, :N]
     elif M % 8 == 0 and K % 128 == 0 and N % 128 == 0:
         bm = _pick_block_rows(M, 128)
         bk = 512 if K % 512 == 0 else 128
@@ -284,7 +284,7 @@ def mxint_ln_linear_op(x: jnp.ndarray, gamma: jnp.ndarray,
                             act_block=act_block, mant_bits=mant_bits,
                             lut_bits=lut_bits, rms_only=rms_only,
                             bm=_pick_block_rows(x2p.shape[0], 128), bn=128,
-                            interpret=True)[:rows, :N]
+                            interpret=interp)[:rows, :N]
     elif M % 8 == 0 and K % 128 == 0 and N % 128 == 0:
         y = mxint_ln_matmul(x2, gamma, beta, w_mant, w_exp, w_block=w_block,
                             act_block=act_block, mant_bits=mant_bits,

@@ -19,7 +19,7 @@ from repro.core.quantize import (MXTensor, dequantize, quantize,
                                  quantize_dequantize,
                                  requantize_to_max_exponent)
 
-from repro.kernels.flash_attention import NEG_INF as _NEG_INF
+from repro.core.mx_types import NEG_INF as _NEG_INF
 
 _LOG2E = 1.4426950408889634
 

@@ -40,11 +40,10 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.mx_types import NEG_INF as _NEG_INF
 from repro.core.mx_types import QuantConfig
 from repro.models import layers as L
 from repro.models.model_api import ModelConfig, Param, dense_init, ones_init
-
-_NEG_INF = -2.0e38
 
 
 # ---------------------------------------------------------------------------
@@ -114,7 +113,8 @@ def _direct_attention(q, k, v, mask, quant: QuantConfig, scale):
     return jnp.einsum("bkgsS,bSkd->bskgd", p, v)
 
 
-def _q_chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale):
+def _q_chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale,
+                         positions=None):
     """Attention chunked over QUERY blocks (lax.scan, no carry).
 
     For long prefill the kv-chunked online-softmax form drags a
@@ -125,6 +125,12 @@ def _q_chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale):
     fusion boundaries in bf16 (the f32 accumulation lives inside the dot).
     On real TPU the Pallas flash kernel keeps scores in VMEM entirely; this
     is the XLA-path equivalent structure.
+
+    positions: optional (1|b, >=s) per-row positions with the exact mask
+    semantics of ``positions_mask`` — ragged/left-padded batches mask each
+    row from its own position VALUES (self-attn keys carry the same values;
+    cross keys stay contiguous indices).  ``None`` keeps the contiguous
+    ``q_offset + row-index`` arithmetic.
     """
     b, s, kv, g, hd = q.shape
     S = k.shape[1]
@@ -139,26 +145,34 @@ def _q_chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale):
     qc = jnp.swapaxes(qs.reshape(b, nq, chunk, kv, g, hd), 0, 1)
     kt = jnp.einsum("bSkd->bkdS", k)
     vt = jnp.einsum("bSkd->bkSd", v)
-    k_pos = jnp.arange(S)
+    k_pos = jnp.arange(S, dtype=jnp.int32)[None, :]            # (1, S)
+    if positions is None:
+        pc = (q_offset + jnp.arange(s, dtype=jnp.int32)).reshape(nq, 1, chunk)
+    else:
+        pos2 = positions if positions.ndim == 2 else positions.reshape(1, -1)
+        q_pos = pos2[:, -s:].astype(jnp.int32)                 # (1|b, s)
+        if S == s:
+            k_pos = q_pos                                      # self: values
+        rows = q_pos.shape[0]
+        pc = jnp.swapaxes(q_pos.reshape(rows, nq, chunk), 0, 1)
     neg = jnp.asarray(jnp.finfo(q.dtype).min, q.dtype)
 
     def block(_, inp):
-        qi, qb = inp
+        qb, qp = inp                                           # qp: (1|b, c)
         # f32 accumulation inside the dot; scores cross the fusion boundary
         # in the model dtype (halves every downstream score pass)
         s_blk = jnp.einsum("bckgd,bkdS->bkgcS", qb, kt,
                            preferred_element_type=jnp.float32
                            ).astype(q.dtype)
-        q_pos = q_offset + qi * chunk + jnp.arange(chunk)
-        mask = jnp.ones((chunk, S), dtype=bool)
+        mask = jnp.ones((qp.shape[0], chunk, S), dtype=bool)
         if causal:
-            mask &= q_pos[:, None] >= k_pos[None, :]
+            mask &= qp[:, :, None] >= k_pos[:, None, :]
         if window > 0:
-            mask &= (q_pos[:, None] - k_pos[None, :]) < window
-        s_blk = jnp.where(mask[None, None, None], s_blk, neg)
+            mask &= (qp[:, :, None] - k_pos[:, None, :]) < window
+        s_blk = jnp.where(mask[:, None, None], s_blk, neg)
         m = jnp.max(s_blk, axis=-1, keepdims=True)
-        # exp(neg - m) == 0 and every query row sees at least itself, so no
-        # second masking pass is needed
+        # exp(neg - m) == 0 and every query row sees at least itself (its
+        # own position value), so no second masking pass is needed
         p = jnp.exp((s_blk - m).astype(jnp.float32))
         l = jnp.sum(p, axis=-1, keepdims=True)
         pb = (p / jnp.maximum(l, 1e-30)).astype(q.dtype)
@@ -166,7 +180,7 @@ def _q_chunked_attention(q, k, v, *, q_offset, causal, window, chunk, scale):
                        preferred_element_type=jnp.float32)
         return None, o.astype(q.dtype)
 
-    _, outs = jax.lax.scan(block, None, (jnp.arange(nq), qc))
+    _, outs = jax.lax.scan(block, None, (qc, pc))
     return jnp.swapaxes(outs, 0, 1).reshape(b, s, kv, g, hd)
 
 
@@ -357,7 +371,8 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
                 v[:, -W:].astype(cache["v"].dtype))
             new_cache = {"k": ck, "v": cv}
             o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
-                                     window=window, chunk=chunk, scale=scale)
+                                     window=window, chunk=chunk, scale=scale,
+                                     positions=positions)
         else:
             # prefill fits the cache: write slots [0, s)
             ck = jax.lax.dynamic_update_slice(
@@ -366,7 +381,8 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
                 cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
             new_cache = {"k": ck, "v": cv}
             o = _q_chunked_attention(q, k, v, q_offset=0, causal=causal,
-                                     window=window, chunk=chunk, scale=scale)
+                                     window=window, chunk=chunk, scale=scale,
+                                     positions=positions)
     else:
         # cache-less execution: the backend picks its path — direct masked
         # softmax / query-chunked online softmax (XLA backends, with the

@@ -135,6 +135,8 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
     """x: (..., seq, heads, hd); positions: (..., seq)."""
     hd = x.shape[-1]
     half = hd // 2
+    # rank-1 frequency ladder on concrete constants, not a datapath op:
+    # repro-lint: allow[models-float-nonlinear] positional constants
     freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) *
                     (jnp.log(theta) / half))
     ang = positions[..., None].astype(jnp.float32) * freqs      # (..., s, half)

@@ -83,7 +83,10 @@ def moe_ffn(x: jnp.ndarray, p: Dict[str, Param], cfg: ModelConfig, *,
     top_logits, top_idx = jax.lax.top_k(logits, k)        # (D, Tl, k)
     gates = L.softmax(top_logits, quant, axis=-1).astype(x.dtype)
 
-    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e — a float
+    # TRAINING statistic, deliberately outside the quantized datapath
+    # (the routed gates above go through L.softmax)
+    # repro-lint: allow[models-float-nonlinear] float-by-design aux loss
     probs = jax.nn.softmax(logits, axis=-1)
     me = jnp.mean(probs, axis=(0, 1))
     ce = jnp.mean(jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32),

@@ -431,15 +431,22 @@ class TestAttentionOpFallbacks:
                                          causal=False)),
             rtol=2e-4, atol=2e-4)
 
-    def test_pathological_head_dim_counted_and_warned(self):
+    def test_pathological_head_dim_counted_and_warned_exactly_once(self):
+        """One fallback event = one counter bump AND one UserWarning — a
+        warn-per-head or warn-per-block regression would double-fire."""
+        import warnings as W
         ops.reset_attention_fallbacks()
         q = _rand((1, 1, 8, 2064), seed=98, scale=0.1)
         k = _rand((1, 1, 8, 2064), seed=99, scale=0.1)
         v = _rand((1, 1, 8, 2064), seed=100, scale=0.1)
-        with pytest.warns(UserWarning, match="fell back"):
+        with W.catch_warnings(record=True) as caught:
+            W.simplefilter("always")
             o = ops.attention_op(q, k, v, causal=True)
+        hits = [w for w in caught if "fell back" in str(w.message)]
+        assert len(hits) == 1, [str(w.message) for w in caught]
+        assert issubclass(hits[0].category, UserWarning)
         assert o.shape == q.shape
-        assert ops.attention_fallback_counts().get("head_dim") == 1
+        assert ops.attention_fallback_counts() == {"head_dim": 1}
         ops.reset_attention_fallbacks()
 
 

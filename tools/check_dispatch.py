@@ -18,12 +18,17 @@ token outside the seam is flagged — reversed comparisons
 and dict-dispatch ``{...}[q.mode]`` all require writing ``.mode``, so
 none can evade the guard (nothing outside the seam has a legitimate
 read of the mode string; identifiers merely ENDING in "mode" —
-``tp_mode``, ``exp_mode`` — are untouched).  Run from the repo root (CI
-does; tests/test_datapath.py runs it in tier-1)::
+``tp_mode``, ``exp_mode`` — are untouched).
 
-    python tools/check_dispatch.py
+This check is folded into the unified static-analysis runner as the
+``dispatch-seam`` rule — CI and local runs go through that
+(DESIGN.md §13)::
 
-Also importable: ``check(root) -> list[str]`` returns the problems.
+    PYTHONPATH=src python tools/repro_lint.py
+
+Standalone invocation (``python tools/check_dispatch.py``) and the
+importable ``check(root) -> list[str]`` remain for scripting;
+tests/test_datapath.py runs ``check`` in tier-1.
 """
 from __future__ import annotations
 

@@ -4,11 +4,16 @@
 Scans ``src/ benchmarks/ examples/ tests/`` for ``DESIGN.md §N``
 citations (the docstring convention) and fails if docs/DESIGN.md is
 missing, or any cited §N has no ``## §N`` heading, or the README lacks
-the tier-1 verify command.  Run from the repo root (CI does)::
+the tier-1 verify command.
 
-    python tools/check_docs.py
+This check is folded into the unified static-analysis runner as the
+``docs-links`` rule — CI and local runs go through that
+(DESIGN.md §13)::
 
-Also importable: ``check(root) -> list[str]`` returns the problems.
+    PYTHONPATH=src python tools/repro_lint.py
+
+Standalone invocation (``python tools/check_docs.py``) and the
+importable ``check(root) -> list[str]`` remain for scripting.
 """
 from __future__ import annotations
 

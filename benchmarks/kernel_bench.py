@@ -88,6 +88,7 @@ def run():
     rows.extend(deit_mode_rows())
     rows.extend(deit_ln_fusion_rows())
     rows.extend(deit_sharded_rows())
+    rows.extend(lm_batching_rows())
     return rows
 
 
@@ -254,6 +255,70 @@ def deit_sharded_rows(tp: int = 2):
     rows.append((f"kernel/{rep['arch']}_sharded_bit_exact",
                  float(rep["parity"]["column"]["bit_exact"]),
                  "column TP == single-device sim, bitwise"))
+    return rows
+
+
+def lm_batching_rows(batch: int = 4, n_requests: int = 16):
+    """Slot vs wave continuous batching on a ragged decode workload.
+
+    Same engine, same requests, same per-row index datapath — only the
+    admission policy differs.  The workload alternates short and long
+    ``max_new_tokens`` so wave admission (slots freed only when the whole
+    batch drains) strands capacity behind each long tail while slot
+    admission refills freed rows immediately.  CPU wall-clock, xla mode
+    (mode='off') — the ratio, not the absolute tokens/sec, is the point.
+    """
+    import time
+
+    from repro.models.model_api import ModelConfig
+    from repro.models.transformer import DecoderLM
+    from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving.scheduler import BatchScheduler, Request
+
+    cfg = ModelConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=128, ffn_kind="gelu",
+                      dtype=jnp.float32, quant=QuantConfig(mode="off"))
+    model = DecoderLM(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, ServeConfig(max_len=96, batch=batch))
+
+    def stream():
+        rng = np.random.default_rng(0)             # identical every replay
+        reqs = []
+        for uid in range(n_requests):
+            plen = int(rng.integers(2, 12))
+            max_new = 48 if uid % batch == 0 else 4    # heavy ragged tail
+            prompt = rng.integers(1, 128, plen).astype(np.int32)
+            reqs.append(Request(uid=uid, prompt=prompt,
+                                max_new_tokens=max_new))
+        return reqs
+
+    def bench(admission):
+        sched = BatchScheduler(eng, batch_size=batch, prefill_len=16,
+                               admission=admission)
+        for r in stream():
+            sched.submit(r)
+        sched.run()                                    # warm the jits
+        sched = BatchScheduler(eng, batch_size=batch, prefill_len=16,
+                               admission=admission)
+        for r in stream():
+            sched.submit(r)
+        t0 = time.perf_counter()
+        done = sched.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.generated) for r in done)
+        assert len(done) == n_requests
+        return toks / dt
+
+    rows = []
+    wave = bench("wave")
+    slot = bench("slot")
+    rows.append(("kernel/lm_batching_wave_tok_s", round(wave, 1),
+                 "wave-synchronous admission, ragged max_new"))
+    rows.append(("kernel/lm_batching_slot_tok_s", round(slot, 1),
+                 "slot-level admission, same workload"))
+    rows.append(("kernel/lm_batching_slot_speedup", round(slot / wave, 2),
+                 "slot / wave decode throughput"))
     return rows
 
 

@@ -422,12 +422,13 @@ def _sweep_flash() -> List[PallasCapture]:
             interpret=True),
         _sds((6, 200, 128)), _sds((6, 256, 128)), _sds((6, 256, 128)),
         label="flash-deit")
-    # decode over a 128-slot ring, GQA heads folded to sublane rows
+    # decode over a 128-slot ring, GQA heads folded to sublane rows,
+    # per-row (B, W) ring validity (slot-level batching contract)
     caps += capture_pallas_calls(
         lambda q, k, v, m: flash_attention_decode.__wrapped__(
             q, k, v, m, block_k=128, w_len=128, interpret=True),
         _sds((2, 2, 8, 128)), _sds((2, 128, 2, 128)),
-        _sds((2, 128, 2, 128)), _sds((128,), jnp.bool_),
+        _sds((2, 128, 2, 128)), _sds((2, 128), jnp.bool_),
         label="flash-decode")
     return caps
 

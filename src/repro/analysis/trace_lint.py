@@ -280,13 +280,60 @@ def _decode_kernel_target() -> List[Violation]:
     x = jnp.zeros((2, 1, 64), jnp.float32)
     cache = A.init_kv_cache(cfg, 2, 32, 0, jnp.float32)
     # q/k/v projections + fused decode kernel + wo = 5 pallas calls; the
-    # old XLA scoring path would re-introduce a float softmax chain
+    # old XLA scoring path would re-introduce a float softmax chain.
+    # Heterogeneous PER-ROW indices (ISSUE 7): the (b, W) ring validity
+    # must not change the lowered kernel structure.
     rules = TraceRules(deny_outside_pallas=KERNEL_NL_DENY,
                        forbid_softmax_chain=True, pallas_budget=(5, 5))
     return lint_fn(
         lambda xv, c: A.attention(p, xv, cfg, quant=kq, cache=c,
-                                  cache_index=jnp.int32(7))[0],
+                                  cache_index=jnp.asarray([7, 4],
+                                                          jnp.int32))[0],
         (x, cache), rules, "decode-step[kernel]")
+
+
+def _slot_step_kernel_target() -> List[Violation]:
+    """The slot-level scheduler's MIXED step (ISSUE 7): one batch-1 slot
+    prefill scattered into the live cache + one full-batch decode.  The
+    pallas budget pins the fused structure of BOTH phases — 17 kernels
+    total: 8 from prefill + 9 from decode (q/k/v projections + the
+    fused decode-ring kernel + the FFN/norm set).  A count drift here
+    means a kernel was dropped from (or duplicated in) either phase —
+    e.g. per-slot cache scatter accidentally re-lowering the whole
+    prefill per row.  Budget ONLY, no nonlinear deny rules: cache
+    prefill deliberately scores through the XLA q-chunked online
+    softmax (``models/attention.py:_q_chunked_attention`` — the §Perf
+    llama3-prefill structure), so a float exp in the prefill phase is
+    by design; the no-float-softmax contract for the decode phase is
+    pinned by ``_decode_kernel_target`` above."""
+    from repro.core.mx_types import QuantConfig
+    from repro.models.model_api import ModelConfig
+    from repro.models.transformer import DecoderLM
+    from repro.serving.engine import (make_decode_step,
+                                      make_slot_prefill_step,
+                                      pack_params_mxint)
+
+    kq = QuantConfig(mode="kernel", quantize_nonlinear=True)
+    cfg = ModelConfig(n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+                      d_ff=128, vocab=100, ffn_kind="gelu",
+                      dtype=jnp.float32, quant=kq)
+    model = DecoderLM(cfg)
+    packed = pack_params_mxint(model.init(jax.random.key(0)),
+                               kq.weight_fmt)
+    slot_prefill = make_slot_prefill_step(model, 32)
+    decode = make_decode_step(model)
+    cache = model.cache_init(2, 32)
+    tokens = jnp.zeros((1, 8), jnp.int32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+
+    def mixed(tokens, cache, tok):
+        _, cache = slot_prefill(packed, tokens, jnp.int32(5),
+                                jnp.int32(1), cache)
+        return decode(packed, tok, cache)
+
+    rules = TraceRules(pallas_budget=(17, 17))
+    return lint_fn(mixed, (tokens, cache, tok), rules,
+                   "slot-prefill+decode-step[kernel]")
 
 
 def _backend_op_targets() -> List[Violation]:
@@ -324,7 +371,8 @@ def _backend_op_targets() -> List[Violation]:
 
 
 TARGETS: Tuple[Callable[[], List[Violation]], ...] = (
-    _deit_kernel_target, _decode_kernel_target, _backend_op_targets)
+    _deit_kernel_target, _decode_kernel_target, _slot_step_kernel_target,
+    _backend_op_targets)
 
 
 @register_rule(

@@ -183,9 +183,11 @@ class Datapath:
 
     def attention_decode(self, qv, ck, cv, valid, *, q, scale: float):
         """Single-position decode over a cache ring.  qv: (b, 1, kv, g, hd);
-        ck/cv: (b, W, kv, hd); valid: (W,) bool.  Returns qv's shape."""
+        ck/cv: (b, W, kv, hd); valid: (b, W) per-row ring validity (a (W,)
+        vector broadcasts — shared validity).  Returns qv's shape."""
         from repro.models import attention as A
-        mask = valid[None, None, None, None, :]            # (1,1,1,1,W)
+        v2 = valid if valid.ndim == 2 else valid[None]     # (1|b, W)
+        mask = v2[:, None, None, None, :]                  # (1|b,1,1,1,W)
         sc = A._gqa_scores(qv, ck.astype(qv.dtype), scale)
         sc = jnp.where(mask, sc.astype(jnp.float32), A._NEG_INF)
         pr = self.softmax(sc, q=q, axis=-1).astype(qv.dtype)

@@ -293,7 +293,7 @@ def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, lut_ref, o_ref,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
-    mask = jnp.broadcast_to((valid_ref[...] > 0)[None, :], s.shape)
+    mask = jnp.broadcast_to((valid_ref[0] > 0)[None, :], s.shape)
     if w_len is not None:
         k_pos = kb * block_k + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
@@ -328,8 +328,9 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     (B, W, Hkv, D) cache rings in the model's NATIVE layout — the kernel
     grid indexes the W and Hkv axes directly via BlockSpecs, so the
     caller never transposes/copies the cache per decode step; valid:
-    (W,) bool/int — nonzero for slots holding a live key (the caller's
-    ring/window slot arithmetic).  Returns (B, Hkv, G, D).
+    (B, W) bool/int — nonzero where row b's slot holds a live key (the
+    caller's PER-ROW ring/window slot arithmetic; a shared (W,) vector
+    broadcasts over the batch).  Returns (B, Hkv, G, D).
 
     Invalid-but-real slots follow the model's NEG_INF masking (quantized
     with the row, sim parity); slots >= ``w_len`` are wrapper padding and
@@ -339,6 +340,8 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """
     b, hkv, g, d = q.shape
     W = k.shape[1]
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (b, W))
     block_k = min(block_k, W)
     assert W % block_k == 0
     if quantize_scores:
@@ -362,7 +365,7 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pl.BlockSpec((1, 1, g, d), lambda i, h, j: (i, h, 0, 0)),
             pl.BlockSpec((1, block_k, 1, d), lambda i, h, j: (i, j, h, 0)),
             pl.BlockSpec((1, block_k, 1, d), lambda i, h, j: (i, j, h, 0)),
-            pl.BlockSpec((block_k,), lambda i, h, j: (j,)),
+            pl.BlockSpec((1, block_k), lambda i, h, j: (i, j)),
             pl.BlockSpec((lut.shape[0],), lambda i, h, j: (0,)),
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, j: (i, h, 0, 0)),

@@ -492,9 +492,9 @@ def attention_decode_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     into rows, all at the current decode position; k, v: (B, W, Hkv, D)
     cache rings in the model's NATIVE layout (the kernel grid indexes W
     and Hkv directly — no per-step transpose/copy of the cache); valid:
-    (W,) bool/int — nonzero for slots holding a live key (the caller's
-    ring/window slot arithmetic, shared by the batch like the scalar
-    cache index).  Returns (B, Hkv, G, D).
+    (B, W) bool/int — nonzero where row b's slot holds a live key (the
+    caller's PER-ROW ring/window slot arithmetic; a shared (W,) vector
+    broadcasts over the batch).  Returns (B, Hkv, G, D).
 
     Padding contract: G is padded to the sublane multiple (8), W and D to
     the lane multiple (128).  Padded SLOTS are masked via the static
@@ -506,19 +506,24 @@ def attention_decode_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """
     b, hkv, g, d = q.shape
     W = k.shape[1]
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (b, W))
     d_p = _ceil_to(d, 128)
     if d_p > _FLASH_MAX_HEAD_DIM:
         _count_fallback("head_dim", f"decode d={d} pads to {d_p}")
         qf = q.reshape(b * hkv, g, d)
         kf = jnp.einsum("bwhd->bhwd", k).reshape(b * hkv, W, d)
         vf = jnp.einsum("bwhd->bhwd", v).reshape(b * hkv, W, d)
+        # per-row validity follows the (b, hkv) fold: row b's mask
+        # repeats across its hkv head rows
+        validf = jnp.repeat(valid, hkv, axis=0)
         if quantize_scores:
             o = ref.mxint_flash_attention_ref(
-                qf, kf, vf, causal=False, key_mask=valid.astype(jnp.int32),
+                qf, kf, vf, causal=False, key_mask=validf.astype(jnp.int32),
                 act_block=act_block, mant_bits=mant_bits, r_bits=r_bits,
                 scale=d ** -0.5)
         else:
-            o = ref.decode_attention_ref(qf, kf, vf, valid,
+            o = ref.decode_attention_ref(qf, kf, vf, validf,
                                          exp_mode=exp_mode, r_bits=r_bits)
         return o.reshape(b, hkv, g, d)
     g_p = _ceil_to(g, 8)
@@ -526,7 +531,7 @@ def attention_decode_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     qp = _pad_dim(_pad_dim(q, 2, g_p), 3, d_p)
     kp = _pad_dim(_pad_dim(k, 1, W_p), 3, d_p)
     vp = _pad_dim(_pad_dim(v, 1, W_p), 3, d_p)
-    validp = _pad_dim(valid.astype(jnp.int32), 0, W_p)
+    validp = _pad_dim(valid.astype(jnp.int32), 1, W_p)
     o = flash_attention_decode(qp, kp, vp, validp, exp_mode=exp_mode,
                                r_bits=r_bits,
                                quantize_scores=quantize_scores,

@@ -147,8 +147,8 @@ def mxint_flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     onto the act grid, zero the masked lanes, then p @ V.  This is what
     ``flash_attention(exp_mode='mxint', quantize_scores=True)`` computes
     blocked; when one k block covers the row the kernel matches this
-    oracle exactly.  ``key_mask``: optional (Sk,) validity vector (the
-    decode variant's ring mask).
+    oracle exactly.  ``key_mask``: optional (Sk,) or per-row (BH, Sk)
+    validity (the decode variant's ring mask).
     """
     bh, sq, d = q.shape
     sk = k.shape[1]
@@ -163,9 +163,11 @@ def mxint_flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         mask &= q_pos >= k_pos
     if window > 0:
         mask &= (q_pos - k_pos) < window
+    mask = mask[None]                                      # (1, sq, sk)
     if key_mask is not None:
-        mask &= (key_mask > 0)[None, :]
-    s = jnp.where(mask[None], s, _NEG_INF)
+        km = (key_mask > 0)
+        mask = mask & (km[:, None, :] if km.ndim == 2 else km[None, None, :])
+    s = jnp.where(mask, s, _NEG_INF)
     fmt = MXFormat(mant_bits, act_block)
     t = quantize(s, fmt, axis=-1)
     m, lam = requantize_to_max_exponent(t, axis=-1)
@@ -177,7 +179,7 @@ def mxint_flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     s_m, s_e = jnp.frexp(jnp.maximum(sm, 1e-30))
     y = (p / s_m) * jnp.exp2(-s_e.astype(jnp.float32))
     y = quantize_dequantize(y, fmt, axis=-1)
-    y = jnp.where(mask[None], y, 0.0)
+    y = jnp.where(mask, y, 0.0)
     return jnp.einsum("bqk,bkd->bqd", y, v.astype(jnp.float32)).astype(q.dtype)
 
 
@@ -190,16 +192,18 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                          scale: float | None = None) -> jnp.ndarray:
     """Unblocked single-position decode oracle.
 
-    q: (BH, G, D); k, v: (BH, W, D) cache rings; valid: (W,) slot
-    validity.  Masked softmax over the ring with the requested exp
-    datapath — the jnp mirror of ``flash_attention_decode``.
+    q: (BH, G, D); k, v: (BH, W, D) cache rings; valid: (W,) shared or
+    (BH, W) per-row slot validity.  Masked softmax over the ring with
+    the requested exp datapath — the jnp mirror of
+    ``flash_attention_decode``.
     """
     bh, g, d = q.shape
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     s = jnp.einsum("bgd,bwd->bgw", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    mask = (valid > 0)[None, None, :]
+    vm = valid > 0
+    mask = vm[:, None, :] if vm.ndim == 2 else vm[None, None, :]
     s = jnp.where(mask, s, _NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     if exp_mode == "mxint":

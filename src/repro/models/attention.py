@@ -325,8 +325,13 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
             k = L.rmsnorm(k, p["k_norm"], q=quant, eps=cfg.norm_eps)
 
     if positions is None:
-        base = cache_index if cache_index is not None else 0
-        positions = base + jnp.arange(s)[None, :]        # (1, s)
+        if cache_index is not None:
+            base = jnp.asarray(cache_index, jnp.int32)
+            if base.ndim == 1:                           # per-row (b,) index
+                base = base[:, None]
+        else:
+            base = 0
+        positions = base + jnp.arange(s)[None, :]        # (1|b, s)
     if use_rope:
         q = L.rope(q, positions, cfg.rope_theta)
         if kv_override is None:
@@ -338,22 +343,32 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
     if cache is not None and kv_override is None:
         W = cache["k"].shape[1]
         if s == 1:
-            slot = (cache_index % W) if window > 0 else cache_index
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            # decode at PER-ROW indices: cache_index may be () (legacy
+            # scalar, e.g. the encoder-decoder stack) or (b,) — scalars
+            # broadcast so every consumer below sees one (b,) contract.
+            # Row i writes its own slot and masks its own ring validity,
+            # which is what lets a freshly prefilled slot coexist with
+            # rows deep into decode (slot-level batching, DESIGN.md §7).
+            idx = jnp.asarray(cache_index, jnp.int32)
+            if idx.ndim == 0:
+                idx = jnp.broadcast_to(idx, (b,))
+            slot = (idx % W) if window > 0 else idx          # (b,)
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
             new_cache = {"k": ck, "v": cv}
-            # absolute position of every slot
-            idx = jnp.arange(W)
+            # absolute position of every slot, per row
+            t = idx[:, None]                                 # (b, 1)
+            pos = jnp.arange(W)[None, :]                     # (1, W)
             if window > 0:
-                t = cache_index
-                slot_pos = t - jnp.mod(t - idx, W)
+                slot_pos = t - jnp.mod(t - pos, W)
             else:
-                slot_pos = idx
-            valid = (slot_pos >= 0) & (slot_pos <= cache_index)
+                slot_pos = jnp.broadcast_to(pos, (b, W))
+            valid = (slot_pos >= 0) & (slot_pos <= t)        # (b, W)
             if window > 0:
-                valid &= (cache_index - slot_pos) < window
+                valid &= (t - slot_pos) < window
             # backend decode: pallas_kernel runs one fused Pallas kernel
             # over the ring (scoring + online softmax + p @ V, no XLA
             # L.softmax in the trace — DESIGN.md §11); the XLA backends

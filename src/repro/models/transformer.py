@@ -234,12 +234,17 @@ class DecoderLM:
 
     # -- cache --------------------------------------------------------------
     def cache_init(self, batch: int, max_len: int, abstract: bool = False):
+        """The KV cache carries a PER-ROW ``index`` vector (batch,): row i's
+        next write position / number of live tokens.  Rows advance
+        independently, which is what lets ``BatchScheduler`` prefill a new
+        request into one slot while the others keep decoding (slot-level
+        continuous batching — DESIGN.md §7)."""
         cfg = self.cfg
         fn = block_cache_specs if abstract else block_cache_init
         n = cfg.resolved_n_units
         cache = {"units": {}, "tail": {}, "index": (
-            jax.ShapeDtypeStruct((), jnp.int32) if abstract
-            else jnp.zeros((), jnp.int32))}
+            jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+            else jnp.zeros((batch,), jnp.int32))}
         for j, kind in enumerate(cfg.unit):
             c = fn(kind, cfg, batch, max_len, cfg.dtype)
             cache["units"][f"u{j}_{kind}"] = (
@@ -253,7 +258,7 @@ class DecoderLM:
 
     def cache_axes(self):
         cfg = self.cfg
-        axes = {"units": {}, "tail": {}, "index": ()}
+        axes = {"units": {}, "tail": {}, "index": ("batch",)}
         for j, kind in enumerate(cfg.unit):
             axes["units"][f"u{j}_{kind}"] = jax.tree_util.tree_map(
                 lambda a: ("layers",) + tuple(a), block_cache_axes(kind),
@@ -352,17 +357,36 @@ class DecoderLM:
         loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         return loss + aux
 
-    def prefill(self, params, tokens, cache, vision_embeds=None):
-        """Writes the prompt into the cache; returns (last_logits, cache)."""
+    def prefill(self, params, tokens, cache, vision_embeds=None,
+                lengths=None):
+        """Writes the prompt into the cache; returns (last_logits, cache).
+
+        ``lengths``: optional (b,) int32 per-row prompt lengths for
+        RIGHT-padded ragged prompts.  Causal masking makes the pad keys
+        (positions >= length) invisible to every real query, row i's
+        logits are gathered at its own last real position (lengths[i]-1)
+        and ``cache['index']`` is set to lengths — so the pad slots hold
+        garbage K/V that the per-row decode validity then masks out.
+        ``lengths=None`` keeps the dense contract: every row is exactly
+        ``tokens.shape[1]`` long.
+        """
+        b, s = tokens.shape[0], tokens.shape[1]
         x = self._embed_inputs(params, tokens, vision_embeds)
-        positions = jnp.arange(tokens.shape[1])[None, :]
+        positions = jnp.arange(s)[None, :]
         x, cache, _ = self._run_stack(
             params, x, positions=positions, cache=cache,
-            cache_index=jnp.zeros((), jnp.int32), decode=False)
-        return self.logits(params, x[:, -1:]), cache
+            cache_index=jnp.zeros((b,), jnp.int32), decode=False)
+        if lengths is None:
+            return self.logits(params, x[:, -1:]), cache
+        lengths = jnp.asarray(lengths, jnp.int32)
+        cache = dict(cache, index=lengths)
+        last = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+        return self.logits(params, last), cache
 
     def decode_step(self, params, token, cache):
-        """token: (b, 1).  One autoregressive step at cache['index']."""
+        """token: (b, 1).  One autoregressive step; row i reads/writes its
+        cache at its own ``cache['index'][i]``."""
         x = self._embed_inputs(params, token, None)
         idx = cache["index"]
         x, cache, _ = self._run_stack(

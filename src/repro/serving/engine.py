@@ -14,6 +14,14 @@ kernel/sim path (DESIGN.md §10).  A 'data' mesh axis composes: batch
 rows shard over it (trivially bit-exact) so one engine scales both TP
 and DP (DESIGN.md §12).  Continuous batching for classification lives
 in ``repro.serving.scheduler.ClassifyScheduler`` (DESIGN.md §7).
+
+Token engines batch SLOT-level: ``make_slot_prefill_step`` admits one
+request into one row of a live cache, enabled by the per-row
+``cache['index']`` vector (DESIGN.md §7).  Because that index is
+batch-local — row i's cache state never reads another row's index —
+the same 'data'-axis composition applies to LM serving: batch rows
+(and their index entries) shard over 'data' with no cross-shard
+traffic, bit-exact by construction.
 """
 from __future__ import annotations
 
@@ -180,6 +188,43 @@ def make_prefill_step(model) -> Callable:
     return prefill_step
 
 
+def make_slot_prefill_step(model, max_len: int) -> Callable:
+    """Prefill ONE request into ONE slot of a LIVE batch cache.
+
+    The slot-level admission primitive (DESIGN.md §7): runs a batch-1
+    prefill of the right-padded prompt ``tokens`` (1, P) with real
+    length ``length`` into a fresh temporary cache, then scatters every
+    temporary leaf into row ``slot`` of the live ``cache`` along its
+    'batch' axis (found via ``model.cache_axes()``), leaving the other
+    rows' state untouched — which is exactly what the per-row
+    ``cache['index']`` contract makes sound.  Returns ``(tok, cache)``
+    where ``tok`` (1,) is the greedy first generated token.
+
+    Shapes are fixed per P, so one jit specialization serves every
+    (slot, length) pair — zero recompiles after warmup.
+    """
+    axes = model.cache_axes()
+
+    def slot_prefill(params, tokens, length, slot, cache):
+        tmp = model.cache_init(1, max_len)
+        logits, tmp = model.prefill(params, tokens, tmp,
+                                    lengths=jnp.reshape(length, (1,)))
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        tmp_leaves = treedef.flatten_up_to(tmp)
+        ax_leaves = treedef.flatten_up_to(axes)
+        out = []
+        for dst, src, ax in zip(leaves, tmp_leaves, ax_leaves):
+            bi = ax.index("batch")
+            starts = tuple(slot if j == bi else jnp.int32(0)
+                           for j in range(dst.ndim))
+            out.append(jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), starts))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        return tok, jax.tree_util.tree_unflatten(treedef, out)
+
+    return slot_prefill
+
+
 def make_decode_step(model, temperature: float = 0.0) -> Callable:
     def decode_step(params, tokens, cache, rng=None):
         logits, cache = model.decode_step(params, tokens, cache)
@@ -206,6 +251,22 @@ class ServingEngine:
         self._prefill = jax.jit(make_prefill_step(model))
         self._decode = jax.jit(make_decode_step(model,
                                                 serve_cfg.temperature))
+        self._prefill_slot = jax.jit(
+            make_slot_prefill_step(model, serve_cfg.max_len))
+
+    def jit_cache_size(self) -> int:
+        """Total jit specializations of the decode + slot-prefill steps
+        (-1 when this jax build hides cache stats).  The slot-level
+        batching contract: flat after warmup for ANY request mix —
+        decode always sees the one (batch, 1) shape, slot prefill one
+        shape per prompt-length bucket (tests/test_scheduler_properties)."""
+        total = 0
+        for fn in (self._decode, self._prefill_slot):
+            cs = getattr(fn, "_cache_size", None)
+            if cs is None:
+                return -1
+            total += int(cs())
+        return total
 
     def generate(self, batch, max_new_tokens: int = 16):
         cache = self.model.cache_init(batch["tokens"].shape[0],

@@ -5,11 +5,14 @@ jit specialization forever, while mixed-size request streams are packed
 into it at step boundaries:
 
 ``BatchScheduler`` (token engines): maintains a fixed-width decode
-batch.  Admission is WAVE-synchronous: the model's KV cache carries one
-scalar ``cache['index']`` shared by every row, so a prefill can only
-(re)build the whole batch — freed slots therefore idle until the active
-wave drains, then the next wave is admitted in one padded prefill.
-Finished requests are evicted to ``self.finished`` at wave boundaries.
+batch with SLOT-level admission: the KV cache carries a per-row
+``cache['index']`` vector, so a finished row is evicted and the next
+queued request prefilled into that slot immediately (one batch-1
+prefill scattered into the live cache — ``make_slot_prefill_step``)
+while the other rows keep decoding.  No wave barrier: a slot freed at
+step t serves a new request at step t+1.  ``admission='wave'`` retains
+the old whole-batch-drain policy for throughput comparison
+(benchmarks/kernel_bench.py ``lm_batching_rows``).
 
 ``ClassifyScheduler`` (ViT engines): classification is stateless, so
 admission is fully continuous — each step packs up to ``batch`` images
@@ -44,97 +47,145 @@ class Request:
 
 
 class BatchScheduler:
-    """Wave-synchronous continuous batching around a token engine.
+    """Slot-level continuous batching around a token engine.
 
-    engine: a ``ServingEngine`` (needs ``_prefill``/``_decode``/``params``
-    and ``model.cache_init``).  batch_size: fixed decode width.  eos_id:
-    optional stop token.
+    engine: a ``ServingEngine`` (needs ``_prefill_slot``/``_decode``/
+    ``params`` and ``model.cache_init``).  batch_size: fixed decode
+    width.  eos_id: optional stop token.
+
+    prefill_len: fixed (1, P) slot-prefill shape; prompts are
+    RIGHT-padded to it (a longer prompt raises at ``submit``).  ``None``
+    buckets each prompt to the next power of two — one jit
+    specialization per bucket ever seen, flat after warmup.
+
+    admission: 'slot' (default) admits a queued request into every
+    freed slot at each step.  'wave' defers admission until the whole
+    batch has drained — the policy the scalar cache index used to
+    force; kept only as the throughput baseline.
+
+    Token contract: a request's first generated token comes from its
+    prefill logits (recorded at admission), the rest from decode steps
+    — identical to running ``ServingEngine.generate`` on that request
+    alone (property-tested against the unbatched oracle in
+    tests/test_scheduler_properties.py).
     """
 
-    def __init__(self, engine, batch_size: int, eos_id: Optional[int] = None):
+    def __init__(self, engine, batch_size: int, eos_id: Optional[int] = None,
+                 prefill_len: Optional[int] = None, admission: str = "slot"):
+        if admission not in ("slot", "wave"):
+            raise ValueError(admission)
         self.engine = engine
         self.batch = batch_size
         self.eos = eos_id
+        self.prefill_len = prefill_len
+        self.admission = admission
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * batch_size
         self.finished: List[Request] = []
-        self._tok = None
+        self._tok = None               # (batch, 1) int32 numpy
         self._cache = None
 
     def submit(self, req: Request):
-        """Enqueue; admission happens at the next wave boundary.  There is
+        """Enqueue; admitted into the next freed slot (FIFO).  There is
         no capacity limit — the queue absorbs any submit burst."""
+        if self.prefill_len is not None and \
+                len(req.prompt) > self.prefill_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} > prefill_len "
+                f"{self.prefill_len}")
         self.queue.append(req)
 
-    def _admit(self):
-        """Admit a wave into free slots; one padded full-batch prefill.
+    def _bucket(self, n: int) -> int:
+        """Slot-prefill pad length for an ``n``-token prompt: the fixed
+        ``prefill_len``, or the next power of two (>= 8) — each bucket
+        is one jit specialization, so the cache stays flat once every
+        bucket in the workload has been seen."""
+        if self.prefill_len is not None:
+            return self.prefill_len
+        p = 8
+        while p < n:
+            p *= 2
+        return p
 
-        Deferred while ANY active request is still in flight: the KV
-        cache keeps a single scalar index shared by all rows, so a
-        prefill rebuilds the whole batch cache — admitting into a
-        half-finished batch would clobber the in-flight rows' state
-        (regression-tested by TestSchedulerEdgeCases).
-        """
-        if not self.queue:
+    def _record(self, req: Request, tok: int):
+        req.generated.append(tok)
+        if (self.eos is not None and tok == self.eos) or \
+                len(req.generated) >= req.max_new_tokens:
+            req.done = True
+
+    def _evict(self):
+        """Move done requests out of their slots.  Slot mode frees each
+        slot the step after its request finishes; wave mode holds every
+        slot until the whole batch has drained."""
+        if self.admission == "wave" and \
+                any(r is not None and not r.done for r in self.active):
             return
-        if any(r is not None and not r.done for r in self.active):
-            return                      # wave still draining
-        # evict the finished wave
         for i, r in enumerate(self.active):
-            if r is not None:
+            if r is not None and r.done:
                 self.finished.append(r)
                 self.active[i] = None
-        admitted = []
-        for i in range(self.batch):
-            if not self.queue:
-                break
-            self.active[i] = self.queue.popleft()
-            admitted.append(i)
-        if not admitted:
+
+    def _admit(self):
+        """Fill free slots from the queue front, one batch-1 slot
+        prefill each — the live rows' cache state is untouched (per-row
+        index contract, DESIGN.md §7)."""
+        if not self.queue:
             return
-        # pad all prompts to a common length, full-batch prefill
-        max_len = max(len(self.active[i].prompt) for i in admitted)
-        prompts = np.zeros((self.batch, max_len), np.int32)
-        for i in admitted:
-            p = self.active[i].prompt
-            prompts[i, -len(p):] = p     # left-pad
-        cache = self.engine.model.cache_init(self.batch,
-                                             self.engine.cfg.max_len)
-        logits, cache = self.engine._prefill(
-            self.engine.params, {"tokens": jnp.asarray(prompts)}, cache)
-        self._cache = cache
-        self._tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        if self.admission == "wave" and \
+                any(r is not None for r in self.active):
+            return
+        for i in range(self.batch):
+            if not self.queue or self.active[i] is not None:
+                continue
+            req = self.queue.popleft()
+            if self._cache is None:
+                self._cache = self.engine.model.cache_init(
+                    self.batch, self.engine.cfg.max_len)
+                self._tok = np.zeros((self.batch, 1), np.int32)
+            n = len(req.prompt)
+            P = self._bucket(n)
+            tokens = np.zeros((1, P), np.int32)
+            tokens[0, :n] = req.prompt
+            tok, self._cache = self.engine._prefill_slot(
+                self.engine.params, jnp.asarray(tokens), jnp.int32(n),
+                jnp.int32(i), self._cache)
+            t = int(np.asarray(tok)[0])
+            self.active[i] = req
+            self._record(req, t)
+            self._tok[i, 0] = t
 
     def step(self) -> int:
-        """One decode step across the active batch; returns #live requests.
+        """Evict, admit, then one decode step across the batch; returns
+        #live requests.
 
-        Empty queue + empty batch is a no-op returning 0 (safe to call in
-        a drain loop).  Rows whose request hit EOS keep decoding as
-        padding until the wave drains; their output is discarded.
+        Empty queue + empty batch is a no-op returning 0 (safe to call
+        in a drain loop).  Done-but-not-yet-evicted rows and empty slots
+        keep decoding as padding; their output is discarded.
         """
+        self._evict()
         self._admit()
         live = [r for r in self.active if r is not None and not r.done]
-        if not live or self._tok is None:
+        if not live:
             return 0
-        self._tok, self._cache = self.engine._decode(
-            self.engine.params, self._tok, self._cache)
-        toks = np.asarray(self._tok[:, 0])
+        tok, self._cache = self.engine._decode(
+            self.engine.params, jnp.asarray(self._tok), self._cache)
+        self._tok = np.array(tok)          # writable host copy
         for i, r in enumerate(self.active):
             if r is None or r.done:
                 continue
-            t = int(toks[i])
-            r.generated.append(t)
-            if (self.eos is not None and t == self.eos) or \
-                    len(r.generated) >= r.max_new_tokens:
-                r.done = True
+            self._record(r, int(self._tok[i, 0]))
         return sum(1 for r in self.active if r is not None and not r.done)
 
     def run(self, max_steps: int = 1024) -> List[Request]:
-        """Drain queue + batch; returns every request seen (finished waves
-        first, then the residual active wave)."""
+        """Drain queue + batch; returns every request seen (finished
+        first, then the residual active slots).  Slot-level admission
+        means a queued request can never starve behind long-running
+        slots: every freed slot is refilled from the queue front on the
+        very next step."""
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 break
+        self._evict()
         return self.finished + [r for r in self.active if r is not None]
 
 

@@ -121,6 +121,17 @@ def test_trace_lint_flags_xla_backend_with_pallas():
     assert any("pallas_call" in v.message for v in vs)
 
 
+def test_slot_step_target_within_pallas_budget():
+    """ISSUE 7: the slot scheduler's mixed slot-prefill + decode step
+    lints clean — exactly 17 pallas_calls (8 prefill + 9 decode).  A
+    drift means the per-row index plumbing dropped or duplicated a
+    kernel.  (Prefill's float online-softmax is by design — see the
+    target's docstring; decode-phase nonlinear denial is pinned by the
+    decode-step target.)"""
+    vs = TL._slot_step_kernel_target()
+    assert vs == [], [str(v) for v in vs]
+
+
 def test_registry_rejects_duplicates():
     with pytest.raises(ValueError):
         AN.register_rule("kernel-contracts", "dup")(lambda root: [])

@@ -156,7 +156,7 @@ class TestKernelModeServingDecode:
 
         sched = BatchScheduler(eng, batch_size=2)
         rng = np.random.default_rng(0)
-        for uid in range(3):                       # 2 slots -> two waves
+        for uid in range(3):                       # 3 requests, 2 slots
             sched.submit(Request(uid=uid,
                                  prompt=rng.integers(1, 512, uid + 2),
                                  max_new_tokens=2))
@@ -164,14 +164,36 @@ class TestKernelModeServingDecode:
         assert len(done) == 3
         assert all(len(r.generated) == 2 for r in done)
 
+    def test_slot_admission_no_per_slot_recompiles(self, kernel_engine):
+        """Kernel mode: a ragged stream through the slot scheduler keeps
+        the decode + slot-prefill jit caches flat after warmup — slot
+        index / per-row lengths are traced values, never specialization
+        keys (the ClassifyScheduler zero-recompile contract, ported to
+        the token path)."""
+        eng = kernel_engine
+        rng = np.random.default_rng(1)
+
+        def stream(uids, plens):
+            sched = BatchScheduler(eng, batch_size=2, prefill_len=8)
+            for uid, n in zip(uids, plens):
+                sched.submit(Request(uid=uid,
+                                     prompt=rng.integers(1, 512, n),
+                                     max_new_tokens=2))
+            return sched.run()
+
+        stream([0, 1], [3, 5])                     # warm both jits
+        base = eng.jit_cache_size()
+        done = stream([2, 3, 4], [7, 2, 4])        # new slots + lengths
+        assert len(done) == 3
+        if base >= 0:
+            assert eng.jit_cache_size() == base    # zero recompiles
+
 
 # ---------------------------------------------------------------------------
-# scripted stub engine: decode emits last-prompt-token + 1, +2, ... so EOS
-# timing is controlled exactly by the prompt contents (no model in the loop)
+# scripted stub engine: slot prefill emits the LAST real prompt token and
+# decode counts up from it (+1, +2, ...), so EOS timing is controlled
+# exactly by the prompt contents (no model in the loop)
 # ---------------------------------------------------------------------------
-_VOCAB = 64
-
-
 class _StubModel:
     def cache_init(self, batch, max_len):
         return jnp.zeros((batch,), jnp.int32)
@@ -182,59 +204,100 @@ class _StubEngine:
     model = _StubModel()
     params = None
 
-    def _prefill(self, params, batch, cache):
-        toks = np.asarray(batch["tokens"])
-        logits = np.zeros((toks.shape[0], 1, _VOCAB), np.float32)
-        logits[np.arange(toks.shape[0]), 0, toks[:, -1]] = 1.0
-        return jnp.asarray(logits), cache
+    def _prefill_slot(self, params, tokens, length, slot, cache):
+        toks = np.asarray(tokens)
+        tok = jnp.asarray([toks[0, int(length) - 1]], jnp.int32)
+        return tok, cache
 
     def _decode(self, params, tok, cache):
         return tok + 1, cache
 
 
 class TestSchedulerEdgeCases:
-    def _mk(self, batch=2, eos=None):
-        return BatchScheduler(_StubEngine(), batch_size=batch, eos_id=eos)
+    def _mk(self, batch=2, eos=None, admission="slot"):
+        return BatchScheduler(_StubEngine(), batch_size=batch, eos_id=eos,
+                              admission=admission)
 
     def test_empty_queue_step_is_noop(self):
         sched = self._mk()
         assert sched.step() == 0
         assert sched.run(max_steps=4) == []
 
-    def test_submit_beyond_capacity_drains_in_waves(self):
+    def test_submit_beyond_capacity_drains(self):
         sched = self._mk(batch=2)
         for uid in range(5):                       # > 2x capacity
             sched.submit(Request(uid=uid, prompt=np.asarray([uid + 1]),
                                  max_new_tokens=3))
         done = sched.run()
         assert len(done) == 5 and all(r.done for r in done)
-        for r in done:                             # scripted: last+1, +2, +3
-            assert r.generated == [r.uid + 2, r.uid + 3, r.uid + 4]
+        for r in done:                             # scripted: last, +1, +2
+            assert r.generated == [r.uid + 1, r.uid + 2, r.uid + 3]
 
-    def test_eos_mid_batch_does_not_clobber_inflight_rows(self):
-        """Row A hits EOS while row B decodes on; the freed slot must idle
-        until the wave drains (the KV cache index is one scalar shared by
-        the batch) — admitting C early used to re-prefill a fresh cache
-        and clobber B's stream."""
+    def test_freed_slot_refilled_next_step_under_load(self):
+        """Regression (ISSUE 7): a slot freed at step t serves a queued
+        request at step t+1 — eviction used to fire only at wave
+        boundaries, idling freed slots until the whole batch drained —
+        while the surviving row's stream is untouched."""
         eos = 12
         sched = self._mk(batch=2, eos=eos)
         a = Request(uid=0, prompt=np.asarray([10]), max_new_tokens=6)
-        b = Request(uid=1, prompt=np.asarray([20]), max_new_tokens=6)
+        b = Request(uid=1, prompt=np.asarray([20]), max_new_tokens=8)
         c = Request(uid=2, prompt=np.asarray([30]), max_new_tokens=2)
         sched.submit(a)
         sched.submit(b)
-        sched.step()                               # A:11 B:21
-        sched.step()                               # A:12 (EOS) B:22
-        assert a.done and a.generated == [11, 12]
+        sched.step()                               # admit A:10 B:20; +1
+        assert a.generated == [10, 11] and b.generated == [20, 21]
         sched.submit(c)
-        sched.step()                               # slot idles; B:23
-        assert not c.done and len(c.generated) == 0    # deferred admission
+        sched.step()                               # A:12 (EOS) B:22
+        assert a.done and a.generated == [10, 11, 12]
+        sched.step()                               # A evicted, C admitted NOW
+        assert c.generated == [30, 31]             # prefill + 1 decode
+        assert a in sched.finished
         done = sched.run()
-        assert b.generated == [21, 22, 23, 24, 25, 26]  # uninterrupted
-        assert c.done and c.generated == [31, 32]       # admitted after
+        # B's stream never saw the eviction or the admission
+        assert b.generated == [20, 21, 22, 23, 24, 25, 26, 27]
+        assert c.done and c.generated == [30, 31]
         assert {r.uid for r in done} == {0, 1, 2}
 
-    def test_eos_request_evicted_to_finished_on_next_wave(self):
+    def test_run_cannot_starve_queued_request(self):
+        """A long-running slot must not starve the queue: every freed
+        slot is refilled FIFO on the next step, so all short requests
+        complete while the long one is still decoding."""
+        sched = self._mk(batch=2)
+        long = Request(uid=0, prompt=np.asarray([1]), max_new_tokens=40)
+        sched.submit(long)
+        shorts = [Request(uid=1 + i, prompt=np.asarray([2 + i]),
+                          max_new_tokens=2) for i in range(6)]
+        for r in shorts:
+            sched.submit(r)
+        # enough steps for the shorts only if freed slots recycle per-step
+        for _ in range(16):
+            sched.step()
+        assert all(r.done for r in shorts)
+        assert not long.done                       # still occupying its slot
+        done = sched.run()
+        assert {r.uid for r in done} == {r.uid for r in shorts} | {0}
+
+    def test_wave_admission_defers_until_batch_drains(self):
+        """admission='wave' retains the old policy (the kernel_bench
+        baseline): no admission while any slot is active."""
+        sched = self._mk(batch=2, admission="wave")
+        a = Request(uid=0, prompt=np.asarray([10]), max_new_tokens=2)
+        b = Request(uid=1, prompt=np.asarray([20]), max_new_tokens=4)
+        c = Request(uid=2, prompt=np.asarray([30]), max_new_tokens=2)
+        sched.submit(a)
+        sched.submit(b)
+        sched.step()                               # admit wave {A, B}
+        sched.submit(c)
+        sched.step()                               # A done; B alive
+        assert a.done
+        sched.step()                               # slot must idle
+        assert c.generated == []                   # deferred admission
+        done = sched.run()
+        assert c.done and c.generated == [30, 31]  # admitted after drain
+        assert {r.uid for r in done} == {0, 1, 2}
+
+    def test_eos_request_evicted_to_finished(self):
         sched = self._mk(batch=1, eos=12)
         sched.submit(Request(uid=0, prompt=np.asarray([11]),
                              max_new_tokens=8))
@@ -242,7 +305,12 @@ class TestSchedulerEdgeCases:
                              max_new_tokens=2))
         done = sched.run()
         assert [r.uid for r in done] == [0, 1]
-        assert done[0].generated == [12]           # immediate EOS
+        assert done[0].generated == [11, 12]       # EOS on first decode
+
+    def test_prompt_longer_than_prefill_len_rejected(self):
+        sched = BatchScheduler(_StubEngine(), batch_size=2, prefill_len=4)
+        with pytest.raises(ValueError):
+            sched.submit(Request(uid=0, prompt=np.asarray([1] * 5)))
 
 
 class TestClassifyScheduler:

@@ -30,7 +30,7 @@ def _noop_kernel(*refs):
 
 def _capture_2d(shape, block, *, out_block=None, grid=None,
                 index_map=None, out_index_map=None, dtype=jnp.float32,
-                kernel=_noop_kernel, scratch=()):
+                kernel=_noop_kernel, scratch=(), compiler_params=None):
     """Fabricate one 2-D pallas_call capture with the given specs."""
     from jax.experimental import pallas as pl
 
@@ -47,6 +47,7 @@ def _capture_2d(shape, block, *, out_block=None, grid=None,
             out_specs=pl.BlockSpec(out_block, out_index_map),
             out_shape=jax.ShapeDtypeStruct(shape, dtype),
             scratch_shapes=list(scratch),
+            compiler_params=compiler_params,
             interpret=True)(x)
 
     return capture_pallas_calls(fn, jax.ShapeDtypeStruct(shape, dtype),
@@ -108,6 +109,110 @@ def f64_leak() -> List[Violation]:
             "fixture:f64-leak")
 
 
+# ---------------------------------------------------------------------------
+# grid-semantics fixtures (DESIGN.md §14) — file-defined accumulator
+# kernels so the AST gate scan sees real source
+# ---------------------------------------------------------------------------
+def _acc_kernel(x_ref, o_ref, acc_ref):
+    from jax.experimental import pallas as pl
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[...]
+
+    @pl.when(pl.program_id(1) == 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _reversed_acc_kernel(x_ref, o_ref, acc_ref):
+    from jax.experimental import pallas as pl
+
+    @pl.when(pl.program_id(1) == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[...]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _inplace_kernel(x_ref, o_ref):
+    o_ref[...] = o_ref[...] + x_ref[...]
+
+
+def _acc_capture(kernel, compiler_params):
+    from jax.experimental.pallas import tpu as pltpu
+
+    # grid (4, 2); the output map ignores axis 1, so each output block is
+    # written on both of its steps — a revisiting axis by construction
+    return _capture_2d(
+        (512, 256), (128, 256), grid=(4, 2),
+        index_map=lambda i, j: (i, 0),
+        kernel=kernel, scratch=(pltpu.VMEM((128, 256), jnp.float32),),
+        compiler_params=compiler_params)
+
+
+def missing_dim_semantics() -> List[Violation]:
+    """An accumulator grid with no dimension_semantics declaration."""
+    from repro.analysis.grid_semantics import check_captures_semantics
+
+    return check_captures_semantics(_acc_capture(_acc_kernel, None))
+
+
+def race_parallel_accumulator() -> List[Violation]:
+    """The revisiting/gated accumulator axis declared "parallel" — the
+    data race the checker exists for."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.analysis.grid_semantics import check_captures_semantics
+
+    return check_captures_semantics(_acc_capture(
+        _acc_kernel, pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel"))))
+
+
+def reversed_init_flush() -> List[Violation]:
+    """Init gated on the LAST step and flush on the FIRST: early steps
+    accumulate into uninitialised scratch and a partial sum leaves."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.analysis.grid_semantics import check_captures_semantics
+
+    return check_captures_semantics(_acc_capture(
+        _reversed_acc_kernel, pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))))
+
+
+def unaliased_inplace_output() -> List[Violation]:
+    """A kernel reading its output ref with no input_output_aliases —
+    the first visit of each block reads uninitialised VMEM."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.analysis.grid_semantics import check_captures_semantics
+
+    return check_captures_semantics(_capture_2d(
+        (512, 256), (128, 256), kernel=_inplace_kernel,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel"))))
+
+
+def cost_model_regression() -> List[Violation]:
+    """The current tree diffed against a baseline whose byte counts are
+    10% smaller — every row regresses past the 2% CI threshold."""
+    from repro.analysis.cost_model import build_table, compare_to_baseline
+
+    rows = build_table()
+    deflated = {"rows": {
+        r["label"]: {"hbm_bytes": int(r["hbm_bytes"] * 0.9)}
+        for r in rows}}
+    return compare_to_baseline(rows, deflated)
+
+
 def raw_neg_inf_literal() -> List[Violation]:
     return check_source(
         "MASK_VALUE = -2.0e38\n",
@@ -139,6 +244,11 @@ FIXTURES: Dict[str, Callable[[], List[Violation]]] = {
     "raw-neg-inf-literal": raw_neg_inf_literal,
     "exp-in-models": exp_in_models,
     "interpret-literal-in-src": interpret_literal_in_src,
+    "missing-dim-semantics": missing_dim_semantics,
+    "race-parallel-accumulator": race_parallel_accumulator,
+    "reversed-init-flush": reversed_init_flush,
+    "unaliased-inplace-output": unaliased_inplace_output,
+    "cost-model-regression": cost_model_regression,
 }
 
 # the rule each fixture must trip (self-test assertion)
@@ -152,6 +262,11 @@ FIXTURE_RULES: Dict[str, str] = {
     "raw-neg-inf-literal": "neg-inf-literal",
     "exp-in-models": "models-float-nonlinear",
     "interpret-literal-in-src": "interpret-literal",
+    "missing-dim-semantics": "grid-semantics",
+    "race-parallel-accumulator": "grid-semantics",
+    "reversed-init-flush": "grid-semantics",
+    "unaliased-inplace-output": "grid-semantics",
+    "cost-model-regression": "cost-model",
 }
 
 

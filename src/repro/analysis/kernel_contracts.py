@@ -79,6 +79,30 @@ class PallasCapture:
     inputs: Tuple[BlockUse, ...]
     outputs: Tuple[BlockUse, ...]
     scratch: Tuple[ScratchUse, ...]
+    # grid-semantics capture (DESIGN.md §14): the declared per-axis
+    # dimension_semantics (None == the call declared nothing), any
+    # input->output aliasing, and the kernel callable itself (possibly a
+    # functools.partial — grid_semantics AST-inspects its source and
+    # resolves comparator names from the partial's keywords)
+    dimension_semantics: Optional[Tuple[str, ...]] = None
+    input_output_aliases: Tuple[Tuple[int, int], ...] = ()
+    kernel_fn: Optional[Callable] = dataclasses.field(
+        default=None, compare=False)
+
+
+def _dimension_semantics(compiler_params) -> Optional[Tuple[str, ...]]:
+    """Extract dimension_semantics from a ``compiler_params`` kwarg in any
+    of the forms pallas_call accepts (TPUCompilerParams dataclass, flat
+    dict, or the legacy {"mosaic": {...}} nesting)."""
+    if compiler_params is None:
+        return None
+    if isinstance(compiler_params, dict):
+        inner = compiler_params.get("mosaic", compiler_params)
+        ds = inner.get("dimension_semantics") if isinstance(inner, dict) \
+            else getattr(inner, "dimension_semantics", None)
+    else:
+        ds = getattr(compiler_params, "dimension_semantics", None)
+    return tuple(ds) if ds is not None else None
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +142,10 @@ def capture_pallas_calls(fn, *args, label: str = "?",
         out_specs = _as_tuple(kw.get("out_specs"))
         scratch = _as_tuple(kw.get("scratch_shapes", ()))
         out_sds = _as_tuple(osh)
+        dim_sem = _dimension_semantics(kw.get("compiler_params"))
+        aliases = tuple(sorted(
+            (int(a), int(b))
+            for a, b in dict(kw.get("input_output_aliases") or {}).items()))
 
         def runner(*operands):
             ins = tuple(
@@ -140,7 +168,9 @@ def capture_pallas_calls(fn, *args, label: str = "?",
                 label=label, kernel=_kernel_name(kernel),
                 grid=tuple(grid) if isinstance(grid, (list, tuple))
                 else (grid,),
-                inputs=ins, outputs=outs, scratch=scr))
+                inputs=ins, outputs=outs, scratch=scr,
+                dimension_semantics=dim_sem,
+                input_output_aliases=aliases, kernel_fn=kernel))
             return jax.tree_util.tree_map(
                 lambda s: jnp.zeros(s.shape, s.dtype), osh)
 
@@ -211,8 +241,9 @@ def _check_alignment(cap: PallasCapture, use: BlockUse) -> List[Violation]:
                     "kernel-contracts", _where(cap),
                     f"{use.name}: second-minor tiled block dim {blk} is not "
                     f"a multiple of {use.dtype}'s native ({native},{LANE}) "
-                    f"tile — Mosaic may need a relayout on real hardware",
-                    severity=WARN))
+                    f"tile — Mosaic may need a relayout on real hardware "
+                    f"(for mxint exponent planes, exp_block_rows={native} "
+                    f"selects the native fetch)", severity=WARN))
     return out
 
 
@@ -351,12 +382,14 @@ def _sweep_matmul() -> List[PallasCapture]:
             out_dtype=jnp.float32),
         _sds((128, 1024)), _sds((1024, 512), jnp.int8),
         _sds((4, 512), jnp.int8), label="matmul-bench")
-    # mxint_linear compiled-TPU tiling: bk=512, OCP-32 weight blocks
+    # mxint_linear compiled-TPU tiling: bk=512, OCP-32 weight blocks,
+    # exponent plane fetched in its native int8 (32, 128) tile (the
+    # exp_block_rows ops.py wiring — keeps the relayout WARN retired)
     caps += capture_pallas_calls(
         lambda x, m, e: mxint_matmul.__wrapped__(
             x, m, e, w_block=32, act_block=16, act_mant_bits=8,
-            quantize_act=True, bm=128, bn=128, bk=512, interpret=False,
-            out_dtype=jnp.float32),
+            quantize_act=True, bm=128, bn=128, bk=512, exp_block_rows=32,
+            interpret=False, out_dtype=jnp.float32),
         _sds((128, 1024)), _sds((1024, 768), jnp.int8),
         _sds((32, 768), jnp.int8), label="matmul-compiled")
     return caps
@@ -436,12 +469,20 @@ def _sweep_flash() -> List[PallasCapture]:
 SWEEP: Tuple[Callable[[], List[PallasCapture]], ...] = (
     _sweep_matmul, _sweep_rowwise, _sweep_ln_matmul, _sweep_flash)
 
+# three rules (kernel-contracts, grid-semantics, cost-model) walk the
+# same sweep; captures are immutable, so one abstract-eval pass serves
+# them all within a process
+_SWEEP_MEMO: List[PallasCapture] = []
 
-def sweep_captures() -> List[PallasCapture]:
+
+def sweep_captures(refresh: bool = False) -> List[PallasCapture]:
+    if _SWEEP_MEMO and not refresh:
+        return list(_SWEEP_MEMO)
     caps: List[PallasCapture] = []
     for builder in SWEEP:
         caps.extend(builder())
-    return caps
+    _SWEEP_MEMO[:] = caps
+    return list(caps)
 
 
 def check_captures(caps: Sequence[PallasCapture],

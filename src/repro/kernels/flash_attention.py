@@ -267,6 +267,11 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
+        # (batch*head, q-block) tiles are independent; the key axis
+        # carries the online-softmax (m, l, acc) scratch sequentially
+        # (DESIGN.md §14).
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, lut)
 
@@ -375,5 +380,9 @@ def flash_attention_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, d), jnp.float32),
         ],
+        # (batch, kv-head) tiles are independent; the cache-window axis
+        # carries the online-softmax scratch sequentially (DESIGN.md §14).
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, valid.astype(jnp.int32), lut)

@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import luts
 from repro.core.mx_types import NonlinearConfig
@@ -85,5 +86,9 @@ def mxint_gelu(x: jnp.ndarray, *, act_block: int = 16, mant_bits: int = 8,
         ],
         out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        # Row blocks touch disjoint state: the whole grid is
+        # parallel (DESIGN.md §14).
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, lut)

@@ -23,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import luts
 
@@ -142,5 +143,9 @@ def mxint_layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, *,
         ],
         out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        # Row blocks touch disjoint state: the whole grid is
+        # parallel (DESIGN.md §14).
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, gamma, beta, lut)

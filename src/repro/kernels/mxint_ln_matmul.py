@@ -132,5 +132,10 @@ def mxint_ln_matmul(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rows, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, d), x.dtype)],
+        # Row blocks are independent; the N axis reuses the normalised
+        # tile cached in scratch at j == 0, so it must run in order
+        # (DESIGN.md §14).
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, gamma, beta_arr, lut, w_mant, w_exp)

@@ -59,7 +59,7 @@ def _quantize_act_tile(x: jnp.ndarray, block: int, mant_bits: int):
 
 def _mxint_matmul_kernel(x_ref, wm_ref, we_ref, o_ref, acc_ref, *,
                          w_block: int, act_block: int, act_mant_bits: int,
-                         quantize_act: bool, n_k: int):
+                         quantize_act: bool, n_k: int, n_exp_sub: int = 1):
     """One (bm, bn) output tile; K accumulated across grid dim 2."""
 
     @pl.when(pl.program_id(2) == 0)
@@ -68,7 +68,14 @@ def _mxint_matmul_kernel(x_ref, wm_ref, we_ref, o_ref, acc_ref, *,
 
     x = x_ref[...].astype(jnp.float32)                        # (bm, bk)
     wm = wm_ref[...].astype(jnp.float32)                      # (bk, bn) ints
-    w_scale = _broadcast_block_exp(we_ref[...], w_block)      # (bk, bn)
+    e = we_ref[...]                                           # int8 exponents
+    if n_exp_sub > 1:
+        # The exponent block spans n_exp_sub K-steps (native-sublane
+        # fetch); slice this step's (bk/w_block) rows out of it.
+        kb_rows = e.shape[0] // n_exp_sub
+        sub = jax.lax.rem(pl.program_id(2), n_exp_sub)
+        e = jax.lax.dynamic_slice_in_dim(e, sub * kb_rows, kb_rows, axis=0)
+    w_scale = _broadcast_block_exp(e, w_block)                # (bk, bn)
 
     if quantize_act:
         # Full integer datapath: int mantissas into the MXU, one combined
@@ -98,15 +105,20 @@ def _mxint_matmul_kernel(x_ref, wm_ref, we_ref, o_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "w_block", "act_block", "act_mant_bits", "quantize_act",
-    "bm", "bn", "bk", "interpret", "out_dtype"))
+    "bm", "bn", "bk", "exp_block_rows", "interpret", "out_dtype"))
 def mxint_matmul(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray, *,
                  w_block: int, act_block: int = 16, act_mant_bits: int = 8,
                  quantize_act: bool = False, bm: int = 128, bn: int = 128,
-                 bk: int = 512, interpret: bool = True,
+                 bk: int = 512, exp_block_rows: int | None = None,
+                 interpret: bool = True,
                  out_dtype=jnp.float32) -> jnp.ndarray:
     """y[M,N] = x[M,K] @ (w_mant * 2^w_exp)[K,N] with MXInt weights.
 
     w_mant: (K, N) int8 mantissas; w_exp: (K/w_block, N) int8 exponents.
+    exp_block_rows widens the exponent-plane fetch to that many rows per
+    block (32 matches the int8 native sublane tile, so Mosaic needs no
+    relayout on real hardware); the kernel slices the current K-step's
+    rows out of the wider resident block.
     """
     M, K = x.shape
     K2, N = w_mant.shape
@@ -122,9 +134,21 @@ def mxint_matmul(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray, *,
         assert bk % act_block == 0
     n_k = K // bk
 
+    n_exp_sub = 1
     if bk >= w_block:
         kb = bk // w_block
-        we_spec = pl.BlockSpec((kb, bn), lambda i, j, k: (k, j))
+        if exp_block_rows is not None and exp_block_rows > kb:
+            # Native-tile exponent fetch (ROADMAP "int8 exponent-plane
+            # tiling"): one (exp_block_rows, bn) block covers
+            # exp_block_rows/kb consecutive K-steps.
+            assert exp_block_rows % kb == 0, (exp_block_rows, kb)
+            assert (K // w_block) % exp_block_rows == 0, \
+                (K, w_block, exp_block_rows)
+            n_exp_sub = exp_block_rows // kb
+            we_spec = pl.BlockSpec((exp_block_rows, bn),
+                                   lambda i, j, k: (k // n_exp_sub, j))
+        else:
+            we_spec = pl.BlockSpec((kb, bn), lambda i, j, k: (k, j))
         eff_w_block = w_block
     else:
         # several K tiles share one exponent row
@@ -134,7 +158,8 @@ def mxint_matmul(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray, *,
 
     kernel = functools.partial(
         _mxint_matmul_kernel, w_block=eff_w_block, act_block=act_block,
-        act_mant_bits=act_mant_bits, quantize_act=quantize_act, n_k=n_k)
+        act_mant_bits=act_mant_bits, quantize_act=quantize_act, n_k=n_k,
+        n_exp_sub=n_exp_sub)
 
     return pl.pallas_call(
         kernel,
@@ -147,5 +172,9 @@ def mxint_matmul(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        # M/N tiles are independent; K revisits the acc scratch and the
+        # output block, so it must stay sequential (DESIGN.md §14).
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_mant, w_exp)

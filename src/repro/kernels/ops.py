@@ -108,6 +108,19 @@ def _pick_block_rows(rows: int, cap: int = 256) -> int:
     return 1
 
 
+def _pick_exp_block_rows(K: int, w_block: int, bk: int) -> int | None:
+    """Widen the exponent-plane fetch to the native int8 (32, 128) tile
+    when the plane shape allows it (ROADMAP "int8 exponent-plane
+    tiling"); None keeps the per-K-step (bk/w_block, bn) fetch."""
+    if bk < w_block:
+        return None
+    kb = bk // w_block
+    native = 32                   # int8 sublane rows
+    if kb >= native or native % kb or (K // w_block) % native:
+        return None
+    return native
+
+
 # ---------------------------------------------------------------------------
 def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
                  bias: jnp.ndarray | None = None, *, w_block: int,
@@ -183,6 +196,7 @@ def mxint_linear(x: jnp.ndarray, w_mant: jnp.ndarray, w_exp: jnp.ndarray,
         y = _mm_kernel(x2, w_mant, w_exp, w_block=w_block,
                        act_block=act_block, act_mant_bits=act_mant_bits,
                        quantize_act=quantize_act, bm=bm, bn=bn, bk=bk,
+                       exp_block_rows=_pick_exp_block_rows(K, w_block, bk),
                        interpret=False)
     else:
         y = ref.mxint_matmul_ref(x2, w_mant, w_exp, w_block=w_block,

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import pytest
 
 import repro.analysis as AN
+from repro.analysis import cost_model as CM
+from repro.analysis import grid_semantics as GS
 from repro.analysis import kernel_contracts as KC
 from repro.analysis import source_rules as SR
 from repro.analysis import trace_lint as TL
@@ -60,6 +62,52 @@ def test_kernel_contracts_clean_on_tree():
 
 def test_trace_invariants_clean_on_tree():
     assert _errors(TL.run(ROOT)) == []
+
+
+def test_grid_semantics_clean_on_tree():
+    """Every swept pallas_call declares dimension_semantics consistent
+    with its revisit/gate evidence (ISSUE 8 acceptance)."""
+    caps = KC.sweep_captures()
+    assert _errors(GS.check_captures_semantics(caps)) == [], \
+        [str(v) for v in GS.check_captures_semantics(caps)]
+
+
+def test_all_captures_declare_semantics():
+    for cap in KC.sweep_captures():
+        assert cap.dimension_semantics is not None, cap.label
+        assert len(cap.dimension_semantics) == len(cap.grid), cap.label
+
+
+def test_grid_semantics_sees_the_accumulator_gates():
+    """The AST scan resolves gates through partials AND the flash
+    kernels' helper call — the evidence the race check rests on."""
+    caps = {c.label: c for c in KC.sweep_captures()}
+    for label, axis in (("matmul-bench", 2), ("ln-matmul-bench", 1),
+                        ("flash-bench", 2), ("flash-decode", 2)):
+        facts = GS.kernel_body_facts(caps[label])
+        assert facts.src_ok, label
+        assert axis in {g.axis for g in facts.gates}, (label, facts.gates)
+
+
+def test_cost_model_clean_on_tree():
+    assert _errors(CM.run(ROOT)) == [], [str(v) for v in CM.run(ROOT)]
+
+
+def test_cost_model_reproduces_deit_fusion_saving():
+    """The static model must reproduce the ~23% LN->qkv HBM saving the
+    bench's analytic counters claim (ISSUE 8 acceptance)."""
+    fus = CM.fusion_study()
+    assert 20.0 <= fus["saving_pct"] <= 26.0, fus["saving_pct"]
+    assert fus["fused_bytes"] < fus["unfused_bytes"]
+
+
+def test_cost_model_counts_planes_separately():
+    """Mantissa and exponent planes appear as separate int8 operands."""
+    rows = {r["label"]: r for r in CM.build_table()}
+    ops = rows["ln-matmul-bench"]["operands"]
+    int8 = [o for o in ops if o["dtype"] == "int8"]
+    assert len(int8) == 2, ops
+    assert {o["bytes_unique"] for o in int8} == {768 * 768, 24 * 768}
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +213,24 @@ def test_repro_lint_fixture_exits_nonzero(name):
 def test_repro_lint_lists_all_rules():
     r = _run_lint("--list")
     assert r.returncode == 0
-    for rule in ("kernel-contracts", "trace-invariants", "source-rules",
-                 "dispatch-seam", "docs-links"):
+    for rule in ("kernel-contracts", "grid-semantics", "cost-model",
+                 "trace-invariants", "source-rules", "dispatch-seam",
+                 "docs-links"):
         assert rule in r.stdout
+
+
+@pytest.mark.slow
+def test_repro_lint_json_roofline_table():
+    """--only cost-model --json emits the machine-readable roofline the
+    CI lanes archive and benchmarks/roofline.py ingests."""
+    import json
+
+    r = _run_lint("--only", "cost-model", "--json")
+    assert r.returncode == 0, r.stderr
+    payload = json.loads(r.stdout)
+    rows = {row["label"]: row for row in payload["cost_model"]["rows"]}
+    assert "ln-matmul-bench" in rows and "flash-deit" in rows
+    for row in rows.values():
+        assert row["hbm_bytes"] > 0 and row["vmem_bytes"] > 0
+    fusion = payload["cost_model"]["fusion"]
+    assert 20.0 <= fusion["saving_pct"] <= 26.0

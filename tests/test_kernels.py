@@ -491,3 +491,106 @@ class TestOpsWrappers:
         vb = jnp.repeat(v, 2, axis=1)
         want = ops.attention_op(q, kb, vb, causal=True)
         np.testing.assert_array_equal(np.asarray(o), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: dimension_semantics annotations + native exponent-plane tiling
+# ---------------------------------------------------------------------------
+def _without_compiler_params(fn, *args, **kwargs):
+    """Re-run a kernel wrapper with compiler_params stripped from every
+    pallas_call it stages — the pre-annotation trace."""
+    import jax.experimental.pallas as plmod
+
+    real = plmod.pallas_call
+
+    def naked(kernel, **kw):
+        kw.pop("compiler_params", None)
+        return real(kernel, **kw)
+
+    jax.clear_caches()    # cached jaxprs would bypass the monkeypatch
+    plmod.pallas_call = naked
+    try:
+        out = fn(*args, **kwargs)
+        return np.asarray(jax.block_until_ready(out))
+    finally:
+        plmod.pallas_call = real
+        jax.clear_caches()
+
+
+class TestDimensionSemantics:
+    """Annotating dimension_semantics must be bit-neutral in interpret
+    mode (DESIGN.md §14) — asserted per kernel family."""
+
+    def _assert_bit_identical(self, fn, *args, **kwargs):
+        want = _without_compiler_params(fn, *args, **kwargs)
+        got = np.asarray(fn(*args, **kwargs))
+        np.testing.assert_array_equal(got, want)
+
+    def test_matmul(self):
+        x = _rand((16, 256), seed=60, scale=0.5)
+        w = _rand((256, 128), seed=61, scale=0.1)
+        wq = quantize(w, MXFormat(8, 32), axis=0)
+        self._assert_bit_identical(
+            mm_kernel, x, wq.mantissa, wq.exponent, w_block=32,
+            quantize_act=True, bm=8, bn=128, bk=128, interpret=True)
+
+    def test_ln_matmul(self):
+        from repro.kernels.mxint_ln_matmul import mxint_ln_matmul
+        x = _rand((32, 256), seed=62, scale=2.0)
+        w = _rand((256, 128), seed=63, scale=0.1)
+        wq = quantize(w, MXFormat(8, 32), axis=0)
+        self._assert_bit_identical(
+            mxint_ln_matmul, x, jnp.ones((256,)), jnp.zeros((256,)),
+            wq.mantissa, wq.exponent, w_block=32, bm=16, bn=128,
+            interpret=True)
+
+    def test_rowwise_kernels(self):
+        x = _rand((16, 256), seed=64, scale=2.0)
+        self._assert_bit_identical(
+            ln_kernel, x, jnp.ones((256,)), jnp.zeros((256,)),
+            block_rows=8, interpret=True)
+        self._assert_bit_identical(
+            sm_kernel, x, block_rows=8, interpret=True)
+        self._assert_bit_identical(
+            gelu_kernel, x, block_rows=8, interpret=True)
+
+    def test_flash_and_decode(self):
+        q = _rand((2, 64, 128), seed=65, scale=0.3)
+        k = _rand((2, 64, 128), seed=66, scale=0.3)
+        v = _rand((2, 64, 128), seed=67)
+        self._assert_bit_identical(
+            flash_attention, q, k, v, causal=True, block_q=32, block_k=32,
+            interpret=True)
+        qd = _rand((2, 2, 8, 128), seed=68, scale=0.3)
+        kd = _rand((2, 128, 2, 128), seed=69, scale=0.3)
+        vd = _rand((2, 128, 2, 128), seed=70)
+        valid = jnp.arange(128) < 100
+        self._assert_bit_identical(
+            flash_attention_decode, qd, kd, vd, valid, block_k=64,
+            interpret=True)
+
+
+class TestExpBlockRows:
+    """mxint_matmul(exp_block_rows=32): the native int8 exponent-plane
+    fetch must be bit-identical to the per-K-step fetch (ROADMAP item)."""
+
+    @pytest.mark.parametrize("quantize_act", [False, True])
+    def test_parity_vs_default(self, quantize_act):
+        x = _rand((32, 1024), seed=71, scale=0.5)
+        w = _rand((1024, 256), seed=72, scale=0.1)
+        wq = quantize(w, MXFormat(8, 32), axis=0)
+        kw = dict(w_block=32, quantize_act=quantize_act, bm=32, bn=128,
+                  bk=512, interpret=True)
+        want = mm_kernel(x, wq.mantissa, wq.exponent, **kw)
+        got = mm_kernel(x, wq.mantissa, wq.exponent, exp_block_rows=32,
+                        **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ops_autoselect(self):
+        # the compiled-path policy: native tile exactly when the plane
+        # divides into (32, bn) blocks spanning whole K-steps
+        assert ops._pick_exp_block_rows(1024, 32, 512) == 32
+        assert ops._pick_exp_block_rows(768, 32, 128) is None   # 24 rows
+        assert ops._pick_exp_block_rows(1024, 32, 128) == 32    # 4-step
+        assert ops._pick_exp_block_rows(256, 256, 512) is None  # kb=2, 1 row
+        assert ops._pick_exp_block_rows(512, 512, 128) is None  # bk < wb

@@ -12,6 +12,8 @@ registry in-process via ``tests/test_analysis.py``::
     python tools/repro_lint.py --only source-rules       # subset
     python tools/repro_lint.py --fixture vmem-over-budget  # must exit 1
     python tools/repro_lint.py --fixtures                # list fixtures
+    python tools/repro_lint.py --only cost-model --json  # roofline table
+    python tools/repro_lint.py --update-cost-baseline    # refresh bytes
 
 Exit code 0 iff no error-severity violation (``warn`` findings print but
 do not fail).  ``--fixture NAME`` runs one deliberately violating
@@ -72,10 +74,23 @@ def main(argv=None) -> int:
                          "it fires (self-test)")
     ap.add_argument("--fixtures", action="store_true",
                     help="list fixture names and exit")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit a machine-readable report (violations + "
+                         "cost-model roofline table) to PATH or stdout")
+    ap.add_argument("--update-cost-baseline", action="store_true",
+                    help="rewrite benchmarks/_cache/cost_model_baseline"
+                         ".json from the current tree and exit")
     args = ap.parse_args(argv)
 
     import repro.analysis as AN
     _register_legacy_rules()
+
+    if args.update_cost_baseline:
+        from repro.analysis import cost_model
+        path = cost_model.write_baseline(ROOT)
+        print(f"repro_lint: wrote {path.relative_to(ROOT)}")
+        return 0
 
     if args.list:
         for rule in AN.rules():
@@ -108,6 +123,31 @@ def main(argv=None) -> int:
     violations = AN.run_rules(ROOT, only=only, skip=skip)
     errors = [v for v in violations if v.severity == AN.ERROR]
     warns = [v for v in violations if v.severity != AN.ERROR]
+
+    if args.json is not None:
+        import json as _json
+
+        from repro.analysis import cost_model
+        payload = {
+            "rules": [r.name for r in AN.rules()],
+            "violations": [
+                {"rule": v.rule, "where": v.where, "severity": v.severity,
+                 "message": v.message} for v in violations],
+            "errors": len(errors),
+            "cost_model": cost_model.report(ROOT),
+        }
+        text = _json.dumps(payload, indent=1, sort_keys=True)
+        if args.json == "-":
+            print(text)
+        else:
+            Path(args.json).write_text(text + "\n")
+            print(f"repro_lint: wrote {args.json}", file=sys.stderr)
+            # the CI log should still show findings inline, not only
+            # inside the archived artifact
+            for v in violations:
+                print(f"repro_lint: {v}", file=sys.stderr)
+        return 1 if errors else 0
+
     for v in warns:
         print(f"repro_lint: warning {v}", file=sys.stderr)
     for v in errors:

@@ -21,8 +21,15 @@ Requests are streamed through ``ClassifyScheduler``: each request carries
 a RANDOM number of images, and the scheduler packs them across request
 boundaries into the fixed batch shape — zero recompiles after warmup.
 
+``--metrics-json PATH`` dumps the full ``repro.telemetry`` snapshot of
+the serving run — request-latency histograms, queue/slot gauges, the
+``serving/recompiles`` counter (0 after warmup) — plus a
+``predicted_vs_measured`` section joining live DeiT kernel probes
+(``matmul-deit``, ``flash-deit``) against the static cost-model table
+by row label (DESIGN.md §15).
+
 Run:  PYTHONPATH=src python examples/serve_deit_mxint.py \
-          [--requests 64] [--batch 16] [--tp 2]
+          [--requests 64] [--batch 16] [--tp 2] [--metrics-json out.json]
 """
 import argparse
 import dataclasses
@@ -39,6 +46,9 @@ def _parse_args():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--tp", type=int, default=1,
                     help="shard packed planes over an N-way 'model' mesh")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the telemetry snapshot + the "
+                         "predicted-vs-measured kernel roofline here")
     return ap.parse_args()
 
 
@@ -134,6 +144,26 @@ def main():
     print(f"  kernel == sim (bit) : {np.array_equal(logits, sim)}")
     rc = engine.jit_cache_size() - cache_warm
     print(f"  recompiles after warmup: {rc if cache_warm >= 0 else 'n/a'}")
+
+    if args.metrics_json:
+        from repro.telemetry import export as tel_export
+        from repro.telemetry import probes as tel_probes
+
+        print("\nrunning kernel probes for the predicted-vs-measured "
+              "join (DeiT matmul + flash attention)...")
+        tel_probes.run_probes()
+        pvm = tel_export.predicted_vs_measured()
+        payload = tel_export.json_snapshot(
+            path=args.metrics_json,
+            extra={"predicted_vs_measured": pvm,
+                   "run": {"images": int(n), "requests": len(done),
+                           "img_per_s": round(n / dt, 2),
+                           "tp": args.tp}})
+        joined = {k["label"]: k["measured_ms"]
+                  for k in pvm["kernels"]}
+        print(f"  metrics -> {args.metrics_json}  "
+              f"({len(payload['histograms'])} histograms, "
+              f"joined kernels: {joined})")
 
 
 if __name__ == "__main__":

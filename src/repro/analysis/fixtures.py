@@ -234,6 +234,18 @@ def interpret_literal_in_src() -> List[Violation]:
         "src/repro/serving/bad_interpret.py")
 
 
+def adhoc_timing_in_src() -> List[Violation]:
+    """Hand-rolled perf_counter deltas in library code — the timing that
+    belongs in a ``telemetry.span`` (DESIGN.md §15)."""
+    return check_source(
+        "import time\n"
+        "def f(fn):\n"
+        "    t0 = time.perf_counter()\n"
+        "    fn()\n"
+        "    return time.perf_counter() - t0\n",
+        "src/repro/serving/bad_timing.py")
+
+
 FIXTURES: Dict[str, Callable[[], List[Violation]]] = {
     "vmem-over-budget": vmem_over_budget,
     "misaligned-tile": misaligned_tile,
@@ -244,6 +256,7 @@ FIXTURES: Dict[str, Callable[[], List[Violation]]] = {
     "raw-neg-inf-literal": raw_neg_inf_literal,
     "exp-in-models": exp_in_models,
     "interpret-literal-in-src": interpret_literal_in_src,
+    "adhoc-timing-in-src": adhoc_timing_in_src,
     "missing-dim-semantics": missing_dim_semantics,
     "race-parallel-accumulator": race_parallel_accumulator,
     "reversed-init-flush": reversed_init_flush,
@@ -262,6 +275,7 @@ FIXTURE_RULES: Dict[str, str] = {
     "raw-neg-inf-literal": "neg-inf-literal",
     "exp-in-models": "models-float-nonlinear",
     "interpret-literal-in-src": "interpret-literal",
+    "adhoc-timing-in-src": "no-adhoc-timing",
     "missing-dim-semantics": "grid-semantics",
     "race-parallel-accumulator": "grid-semantics",
     "reversed-init-flush": "grid-semantics",

@@ -392,6 +392,18 @@ def _sweep_matmul() -> List[PallasCapture]:
             interpret=False, out_dtype=jnp.float32),
         _sds((128, 1024)), _sds((1024, 768), jnp.int8),
         _sds((32, 768), jnp.int8), label="matmul-compiled")
+    # DeiT-Tiny model-path linear: 2x197 tokens padded to 400 rows,
+    # d=192 contraction, lanes padded to 256, OCP-32 weight blocks —
+    # the config ops.mxint_linear launches for the qkv/proj/FFN
+    # projections.  Runtime twin: repro.telemetry.probes
+    # ("matmul-deit"), joined by label in predicted_vs_measured.
+    caps += capture_pallas_calls(
+        lambda x, m, e: mxint_matmul.__wrapped__(
+            x, m, e, w_block=32, act_block=16, act_mant_bits=8,
+            quantize_act=True, bm=16, bn=128, bk=192, interpret=True,
+            out_dtype=jnp.float32),
+        _sds((400, 192)), _sds((192, 256), jnp.int8),
+        _sds((6, 256), jnp.int8), label="matmul-deit")
     return caps
 
 

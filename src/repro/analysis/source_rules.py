@@ -29,6 +29,15 @@ this tool).
     kernel to interpret mode in library code; the backend gate
     (``ops._interpret()``) is the only switch.  Tests and benchmarks may
     pin it freely.
+
+``no-adhoc-timing``
+    ``time.time()``/``time.perf_counter()``/``time.monotonic()`` inside
+    ``src/`` bypasses ``repro.telemetry`` — durations belong in
+    ``telemetry.span`` histograms and timestamps in
+    ``telemetry.walltime()`` so every clock read lands in the one
+    metrics snapshot (DESIGN.md §15).  ``repro/telemetry/`` itself is
+    the sanctioned implementation site; tests, benchmarks, examples and
+    tools time freely.
 """
 from __future__ import annotations
 
@@ -63,6 +72,13 @@ INTERPRET_SCAN_PREFIX = "src/"
 # the contract sweep mirrors wrapper kernel configs under abstract eval
 # (pallas_call is swapped for a recorder; the flag never executes)
 INTERPRET_EXEMPT_PREFIX = "src/repro/analysis/"
+
+ADHOC_TIMING_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "perf_counter", "monotonic",     # from-imported forms
+}
+TIMING_SCAN_PREFIX = "src/"
+TIMING_HOME_PREFIX = "src/repro/telemetry/"   # the implementation itself
 
 
 def _suppressed(lines: Sequence[str], lineno: int, rule: str) -> bool:
@@ -143,6 +159,14 @@ class _Visitor(ast.NodeVisitor):
                         "interpret-literal", kw.value,
                         "interpret=True hardcoded in library code; gate "
                         "on ops._interpret() so TPU runs compile")
+        if (name in ADHOC_TIMING_CALLS
+                and self.relpath.startswith(TIMING_SCAN_PREFIX)
+                and not self.relpath.startswith(TIMING_HOME_PREFIX)):
+            self._flag(
+                "no-adhoc-timing", node,
+                f"ad-hoc {name}() in src/; durations go through "
+                f"telemetry.span, timestamps through telemetry.walltime "
+                f"(DESIGN.md §15)")
         self.generic_visit(node)
 
 
@@ -162,7 +186,8 @@ def check_source(text: str, relpath: str) -> List[Violation]:
 @register_rule(
     "source-rules",
     "AST rules: single NEG_INF sentinel, no bare float nonlinears in "
-    "models/, no interpret=True literals in src/")
+    "models/, no interpret=True literals in src/, no ad-hoc timing "
+    "outside repro/telemetry/")
 def run(root: Path) -> List[Violation]:
     out: List[Violation] = []
     for d in SCAN_DIRS:

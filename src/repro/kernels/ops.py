@@ -16,7 +16,6 @@ identical to the ``mode='sim'`` oracle.
 """
 from __future__ import annotations
 
-import collections
 import functools
 import warnings
 
@@ -40,8 +39,57 @@ _NEG_INF = NEG_INF     # unified sentinel (defined in core/mx_types.py)
 # jit specialization that takes it — exactly the granularity at which the
 # Pallas kernel is or is not in the compiled program.  tests assert DeiT
 # shapes never land here (ISSUE 3 acceptance).
+#
+# The counts live in the ``repro.telemetry`` default registry under
+# ``kernels/attention_fallback/<reason>`` (DESIGN.md §15), so a metrics
+# snapshot carries them alongside the serving counters.  ``FALLBACKS``
+# stays importable as a read view with the Counter semantics the tests
+# use (zero counts are absent, ``clear()`` resets).
 # ---------------------------------------------------------------------------
-FALLBACKS: collections.Counter = collections.Counter()
+_FALLBACK_PREFIX = "kernels/attention_fallback/"
+
+
+class _FallbackView:
+    """dict/Counter-shaped read view over the telemetry fallback
+    counters; the historical ``ops.FALLBACKS`` surface."""
+
+    def _counts(self) -> dict:
+        from repro import telemetry as T
+        return T.default_registry().counters_with_prefix(_FALLBACK_PREFIX)
+
+    def __getitem__(self, reason: str) -> int:
+        return self._counts().get(reason, 0)
+
+    def __contains__(self, reason: str) -> bool:
+        return reason in self._counts()
+
+    def __iter__(self):
+        return iter(self._counts())
+
+    def __len__(self) -> int:
+        return len(self._counts())
+
+    def __eq__(self, other) -> bool:
+        return self._counts() == dict(other)
+
+    def __repr__(self) -> str:
+        return f"FALLBACKS({self._counts()!r})"
+
+    def keys(self):
+        return self._counts().keys()
+
+    def items(self):
+        return self._counts().items()
+
+    def values(self):
+        return self._counts().values()
+
+    def clear(self) -> None:
+        from repro import telemetry as T
+        T.reset(_FALLBACK_PREFIX)
+
+
+FALLBACKS = _FallbackView()
 
 # interpret-mode pathology guard: a (block_q, d) + 2*(block_k, d) f32 tile
 # set beyond this head dim blows past any useful VMEM budget and the
@@ -50,8 +98,8 @@ _FLASH_MAX_HEAD_DIM = 2048
 
 
 def attention_fallback_counts() -> dict:
-    """Copy of the per-reason fallback counter (trace-time granularity)."""
-    return dict(FALLBACKS)
+    """Copy of the per-reason fallback counts (trace-time granularity)."""
+    return FALLBACKS._counts()
 
 
 def reset_attention_fallbacks() -> None:
@@ -59,7 +107,8 @@ def reset_attention_fallbacks() -> None:
 
 
 def _count_fallback(reason: str, detail: str) -> None:
-    FALLBACKS[reason] += 1
+    from repro import telemetry as T
+    T.counter(_FALLBACK_PREFIX + reason).inc()
     warnings.warn(
         f"attention_op fell back to the XLA reference ({reason}: {detail}); "
         "the Pallas flash kernel is NOT in this program (the MXInt "

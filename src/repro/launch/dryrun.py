@@ -22,7 +22,6 @@ Serve cells run twice: weights in bf16 (float baseline) and packed MXInt
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from pathlib import Path
 
@@ -30,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry as T
 from repro.configs import ARCH_IDS, full_config, shape_supported, skip_reason
 from repro.launch import hlo_analysis, specs as S
 from repro.launch.mesh import make_production_mesh, mesh_context
@@ -105,57 +105,60 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         # sequence-parallel KV (ring/local caches shard their seq dim over
         # 'data') and replicate the batch dim.
         rules = dataclasses.replace(rules, batch=None, kv_seq="data")
-    t0 = time.time()
-
-    if shape.kind == "train":
-        state = abstract_train_state(
-            model, grad_compression=grad_compression,
-            n_pods=mesh.shape.get("pod", 1))
-        st_axes = train_state_axes(state)
-        st_sh = shardings_for(st_axes, rules, mesh, state)
-        batch, b_axes = S.batch_specs(cfg, shape, "train")
-        b_sh = shardings_for(b_axes, rules, mesh, batch)
-        step = make_train_step(
-            model, lr_fn=lambda s: jnp.asarray(1e-4, jnp.float32),
-            opt_cfg=AdamWConfig(), microbatches=microbatches,
-            grad_compression=grad_compression, mesh=mesh)
-        jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
-                         out_shardings=(st_sh, None), donate_argnums=(0,))
-        with mesh_context(mesh):
-            lowered = jitted.lower(state, batch)
-            compiled = lowered.compile()
-    else:
-        params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-        if variant == "mxint":
-            from repro.core.mx_types import MXINT6_WEIGHT
-            params = pack_params_mxint(
-                params, MXINT6_WEIGHT, abstract=True,
-                tp_shards=mesh.shape.get("model", 1))
-        p_sh = shardings_for(axes_tree(params), rules, mesh, params)
-        cache = S.decode_cache_specs(model, shape)
-        c_sh = shardings_for(S.decode_cache_axes(model), rules, mesh, cache)
-        if shape.kind == "prefill":
-            batch, b_axes = S.batch_specs(cfg, shape, "prefill")
+    # one span per cell compile: the wall-clock lands in the
+    # span/dryrun/compile/ms histogram AND in this cell's record
+    with T.span("dryrun/compile", devices=mesh.size) as sp:
+        if shape.kind == "train":
+            state = abstract_train_state(
+                model, grad_compression=grad_compression,
+                n_pods=mesh.shape.get("pod", 1))
+            st_axes = train_state_axes(state)
+            st_sh = shardings_for(st_axes, rules, mesh, state)
+            batch, b_axes = S.batch_specs(cfg, shape, "train")
             b_sh = shardings_for(b_axes, rules, mesh, batch)
-            step = make_prefill_step(model)
-            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
-                             out_shardings=(None, c_sh),
-                             donate_argnums=(2,))
+            step = make_train_step(
+                model, lr_fn=lambda s: jnp.asarray(1e-4, jnp.float32),
+                opt_cfg=AdamWConfig(), microbatches=microbatches,
+                grad_compression=grad_compression, mesh=mesh)
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None),
+                             donate_argnums=(0,))
             with mesh_context(mesh):
-                lowered = jitted.lower(params, batch, cache)
+                lowered = jitted.lower(state, batch)
                 compiled = lowered.compile()
         else:
-            batch, b_axes = S.batch_specs(cfg, shape, "decode")
-            tok_sh = shardings_for(b_axes, rules, mesh, batch)["tokens"]
-            step = make_decode_step(model)
-            jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh),
-                             out_shardings=(tok_sh, c_sh),
-                             donate_argnums=(2,))
-            with mesh_context(mesh):
-                lowered = jitted.lower(params, batch["tokens"], cache)
-                compiled = lowered.compile()
+            params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+            if variant == "mxint":
+                from repro.core.mx_types import MXINT6_WEIGHT
+                params = pack_params_mxint(
+                    params, MXINT6_WEIGHT, abstract=True,
+                    tp_shards=mesh.shape.get("model", 1))
+            p_sh = shardings_for(axes_tree(params), rules, mesh, params)
+            cache = S.decode_cache_specs(model, shape)
+            c_sh = shardings_for(S.decode_cache_axes(model), rules, mesh,
+                                 cache)
+            if shape.kind == "prefill":
+                batch, b_axes = S.batch_specs(cfg, shape, "prefill")
+                b_sh = shardings_for(b_axes, rules, mesh, batch)
+                step = make_prefill_step(model)
+                jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                                 out_shardings=(None, c_sh),
+                                 donate_argnums=(2,))
+                with mesh_context(mesh):
+                    lowered = jitted.lower(params, batch, cache)
+                    compiled = lowered.compile()
+            else:
+                batch, b_axes = S.batch_specs(cfg, shape, "decode")
+                tok_sh = shardings_for(b_axes, rules, mesh, batch)["tokens"]
+                step = make_decode_step(model)
+                jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh),
+                                 out_shardings=(tok_sh, c_sh),
+                                 donate_argnums=(2,))
+                with mesh_context(mesh):
+                    lowered = jitted.lower(params, batch["tokens"], cache)
+                    compiled = lowered.compile()
 
-    seconds = time.time() - t0
+    seconds = sp.elapsed_s
     if os.environ.get("REPRO_DUMP_HLO"):
         import gzip
         dump = (OUT_DIR.parent / "hlo" /
@@ -286,10 +289,13 @@ def main():
                                               else "") + ".json")
                     fname.write_text(json.dumps(rec, indent=1))
 
+    n_spans, mean_ms = T.span_stats("dryrun/compile")
     summary = {
         "cells": len(results),
         "failures": failures,
         "ok": failures == 0,
+        "compile_spans": {"count": n_spans,
+                          "mean_ms": round(mean_ms, 1)},
     }
     suffix = f".{args.tag}" if args.tag else ""
     (out_dir / f"summary.{args.mesh}.{args.arch}.{args.shape}{suffix}.json"

@@ -31,9 +31,33 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as T
 from repro.core.mx_types import MXFormat, QuantConfig
 from repro.core.quantize import MXTensor, pack_weight
 from repro.models.model_api import Param, is_param
+
+
+def _note_recompiles(engine) -> None:
+    """Fold the engine's ``jit_cache_size()`` into the
+    ``serving/recompiles`` counter (DESIGN.md §15).
+
+    The first observation on an engine sets its baseline without
+    counting — warmup compiles are expected; every later POSITIVE delta
+    is a recompile and increments the counter.  The counter is created
+    eagerly so a warm, recompile-free run still exports it at 0 (the
+    continuous-batching contract the metrics snapshot now witnesses).
+    Engines whose jax build hides cache stats (size -1) keep the
+    counter at 0 rather than guessing.
+    """
+    counter = T.counter("serving/recompiles")
+    probe = getattr(engine, "jit_cache_size", None)
+    size = probe() if probe is not None else -1
+    if size < 0:                  # stats hidden (or a stub engine)
+        return
+    seen = getattr(engine, "_jit_cache_seen", None)
+    engine._jit_cache_seen = size
+    if seen is not None and size > seen:
+        counter.inc(size - seen)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -269,15 +293,22 @@ class ServingEngine:
         return total
 
     def generate(self, batch, max_new_tokens: int = 16):
-        cache = self.model.cache_init(batch["tokens"].shape[0],
-                                      self.cfg.max_len)
-        logits, cache = self._prefill(self.params, batch, cache)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        out = [tok]
-        for _ in range(max_new_tokens - 1):
-            tok, cache = self._decode(self.params, tok, cache)
-            out.append(tok)
-        return jnp.concatenate(out, axis=1)
+        bsz, plen = batch["tokens"].shape[:2]
+        T.histogram("serving/batch_size",
+                    T.DEFAULT_SIZE_BUCKETS).record(bsz)
+        T.histogram("serving/prefill_len",
+                    T.DEFAULT_SIZE_BUCKETS).record(plen)
+        with T.span("serving/generate", batch=bsz, new_tokens=max_new_tokens):
+            cache = self.model.cache_init(bsz, self.cfg.max_len)
+            logits, cache = self._prefill(self.params, batch, cache)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            out = [tok]
+            for _ in range(max_new_tokens - 1):
+                tok, cache = self._decode(self.params, tok, cache)
+                out.append(tok)
+            result = jnp.concatenate(out, axis=1)
+        _note_recompiles(self)
+        return result
 
 
 # ---------------------------------------------------------------------------
@@ -412,17 +443,21 @@ class ViTServingEngine:
         images = jnp.asarray(images)
         n = images.shape[0]
         batch = self.cfg.batch
-        chunks = []
-        for i in range(0, n, batch):
-            chunk = images[i:i + batch]
-            pad = batch - chunk.shape[0]
-            if pad:
-                chunk = jnp.concatenate(
-                    [chunk, jnp.zeros((pad,) + chunk.shape[1:],
-                                      chunk.dtype)])
-            logits = self.logits_batch(chunk)
-            chunks.append(logits[:batch - pad] if pad else logits)
-        logits = jnp.concatenate(chunks, axis=0)
+        T.histogram("serving/batch_size",
+                    T.DEFAULT_SIZE_BUCKETS).record(batch)
+        with T.span("serving/classify", images=n):
+            chunks = []
+            for i in range(0, n, batch):
+                chunk = images[i:i + batch]
+                pad = batch - chunk.shape[0]
+                if pad:
+                    chunk = jnp.concatenate(
+                        [chunk, jnp.zeros((pad,) + chunk.shape[1:],
+                                          chunk.dtype)])
+                logits = self.logits_batch(chunk)
+                chunks.append(logits[:batch - pad] if pad else logits)
+            logits = jnp.concatenate(chunks, axis=0)
+        _note_recompiles(self)
         return jnp.argmax(logits, axis=-1), logits
 
 

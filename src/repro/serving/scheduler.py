@@ -22,6 +22,13 @@ request completes when its last image is classified.  Because every
 step runs the same (batch, H, W, 3) shape, the jit cache never grows
 past one entry regardless of the request-size mix (asserted via
 ``engine.jit_cache_size()`` in tests/test_sharded_serving.py).
+
+Both schedulers publish to ``repro.telemetry`` (DESIGN.md §15):
+``scheduler/submitted``/``completed``/``admissions`` counters,
+``queue_depth``/``slots_active``/``in_flight`` gauges (conserving
+``submitted == completed + in_flight`` at step boundaries),
+``request_latency_ms`` histograms, throughput gauges, and the
+``serving/recompiles`` counter via the engine's jit-cache delta.
 """
 from __future__ import annotations
 
@@ -31,6 +38,9 @@ from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro import telemetry as T
+from repro.serving.engine import _note_recompiles
 
 
 @dataclasses.dataclass
@@ -44,6 +54,7 @@ class Request:
     max_new_tokens: int = 16
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    _submit_ts: Optional[float] = None  # set by the scheduler at submit
 
 
 class BatchScheduler:
@@ -93,7 +104,10 @@ class BatchScheduler:
             raise ValueError(
                 f"prompt length {len(req.prompt)} > prefill_len "
                 f"{self.prefill_len}")
+        req._submit_ts = T.walltime()
         self.queue.append(req)
+        T.counter("scheduler/submitted").inc()
+        self._update_gauges()
 
     def _bucket(self, n: int) -> int:
         """Slot-prefill pad length for an ``n``-token prompt: the fixed
@@ -113,6 +127,18 @@ class BatchScheduler:
                 len(req.generated) >= req.max_new_tokens:
             req.done = True
 
+    def _update_gauges(self):
+        """Publish the queue/slot occupancy gauges.  The conservation
+        invariant asserted by tests/test_scheduler_properties.py:
+        ``scheduler/submitted == scheduler/completed +
+        scheduler/in_flight`` at every step boundary (a done-but-not-
+        evicted slot still counts as in flight — it completes at
+        eviction)."""
+        slots = sum(1 for r in self.active if r is not None)
+        T.gauge("scheduler/queue_depth").set(len(self.queue))
+        T.gauge("scheduler/slots_active").set(slots)
+        T.gauge("scheduler/in_flight").set(len(self.queue) + slots)
+
     def _evict(self):
         """Move done requests out of their slots.  Slot mode frees each
         slot the step after its request finishes; wave mode holds every
@@ -124,6 +150,12 @@ class BatchScheduler:
             if r is not None and r.done:
                 self.finished.append(r)
                 self.active[i] = None
+                T.counter("scheduler/completed").inc()
+                if r._submit_ts is not None:
+                    T.histogram("scheduler/request_latency_ms",
+                                T.DEFAULT_MS_BUCKETS).record(
+                        (T.walltime() - r._submit_ts) * 1e3)
+        self._update_gauges()
 
     def _admit(self):
         """Fill free slots from the queue front, one batch-1 slot
@@ -146,10 +178,14 @@ class BatchScheduler:
             P = self._bucket(n)
             tokens = np.zeros((1, P), np.int32)
             tokens[0, :n] = req.prompt
-            tok, self._cache = self.engine._prefill_slot(
-                self.engine.params, jnp.asarray(tokens), jnp.int32(n),
-                jnp.int32(i), self._cache)
-            t = int(np.asarray(tok)[0])
+            T.histogram("serving/prefill_len",
+                        T.DEFAULT_SIZE_BUCKETS).record(P)
+            with T.span("scheduler/slot_prefill"):
+                tok, self._cache = self.engine._prefill_slot(
+                    self.engine.params, jnp.asarray(tokens), jnp.int32(n),
+                    jnp.int32(i), self._cache)
+                t = int(np.asarray(tok)[0])
+            T.counter("scheduler/admissions").inc()
             self.active[i] = req
             self._record(req, t)
             self._tok[i, 0] = t
@@ -166,14 +202,23 @@ class BatchScheduler:
         self._admit()
         live = [r for r in self.active if r is not None and not r.done]
         if not live:
+            self._update_gauges()
             return 0
-        tok, self._cache = self.engine._decode(
-            self.engine.params, jnp.asarray(self._tok), self._cache)
-        self._tok = np.array(tok)          # writable host copy
+        with T.span("scheduler/decode_step", live=len(live)) as sp:
+            tok, self._cache = self.engine._decode(
+                self.engine.params, jnp.asarray(self._tok), self._cache)
+            self._tok = np.array(tok)      # writable host copy
+        ntok = 0
         for i, r in enumerate(self.active):
             if r is None or r.done:
                 continue
             self._record(r, int(self._tok[i, 0]))
+            ntok += 1
+        T.counter("scheduler/tokens_generated").inc(ntok)
+        if sp.elapsed_s:
+            T.gauge("scheduler/tokens_per_s").set(ntok / sp.elapsed_s)
+        _note_recompiles(self.engine)
+        self._update_gauges()
         return sum(1 for r in self.active if r is not None and not r.done)
 
     def run(self, max_steps: int = 1024) -> List[Request]:
@@ -206,6 +251,7 @@ class ClassifyRequest:
     labels: Optional[np.ndarray] = None
     done: bool = False
     _next: int = 0                     # images admitted so far
+    _submit_ts: Optional[float] = None  # set by the scheduler at submit
 
 
 class ClassifyScheduler:
@@ -235,7 +281,16 @@ class ClassifyScheduler:
         across steps) in FIFO order.  A zero-image request completes in
         queue order too (with correctly shaped empty results), so
         position-based result/label pairing stays aligned."""
+        req._submit_ts = T.walltime()
         self.queue.append(req)
+        T.counter("scheduler/submitted").inc()
+        self._update_gauges()
+
+    def _update_gauges(self):
+        """Classification holds no slots: in-flight is just the queue
+        (same conservation invariant as ``BatchScheduler``)."""
+        T.gauge("scheduler/queue_depth").set(len(self.queue))
+        T.gauge("scheduler/in_flight").set(len(self.queue))
 
     def jit_cache_size(self) -> int:
         """Specialization count of the underlying jitted forward (see
@@ -253,6 +308,12 @@ class ClassifyScheduler:
                 req.labels = np.zeros((0,), np.int64)
             req.done = True
             self.finished.append(req)
+            T.counter("scheduler/completed").inc()
+            if req._submit_ts is not None:
+                T.histogram("scheduler/request_latency_ms",
+                            T.DEFAULT_MS_BUCKETS).record(
+                    (T.walltime() - req._submit_ts) * 1e3)
+        self._update_gauges()
 
     def step(self) -> int:
         """Classify up to ``batch`` images off the queue front; returns
@@ -272,7 +333,15 @@ class ClassifyScheduler:
         chunk = np.zeros((self.batch,) + img.shape[1:], img.dtype)
         for j, (req, i) in enumerate(take):
             chunk[j] = req.images[i]
-        logits = np.asarray(self.engine.logits_batch(chunk))
+        with T.span("scheduler/classify_step", images=len(take)) as sp:
+            logits = np.asarray(self.engine.logits_batch(chunk))
+        # slot occupancy for a stateless batch = filled rows this step
+        # (the rest of the fixed shape is zero padding)
+        T.gauge("scheduler/slots_active").set(len(take))
+        T.counter("scheduler/images_classified").inc(len(take))
+        if sp.elapsed_s:
+            T.gauge("scheduler/images_per_s").set(len(take) / sp.elapsed_s)
+        _note_recompiles(self.engine)
         for j, (req, i) in enumerate(take):
             if req.logits is None:
                 n = req.images.shape[0]

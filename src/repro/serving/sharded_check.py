@@ -32,12 +32,12 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as T
 from repro.configs.deit import DEIT_TINY
 from repro.core.mx_types import QuantConfig
 from repro.launch.mesh import make_serving_mesh, make_tp_mesh
@@ -109,35 +109,43 @@ def scheduler_check(m_ker, params, mesh, batch: int, image_size: int,
         "jit_cache_after_stream": eng.jit_cache_size(),
         "recompiles_after_warmup":
             eng.jit_cache_size() - cache_after_warmup,
+        # the telemetry view of the same contract (DESIGN.md §15): the
+        # scheduler folds jit-cache deltas into this counter per step
+        "recompiles_counter": T.counter("serving/recompiles").value,
     }
 
 
 def bench_rows(m_sim, m_ker, params, mesh, batch: int, image_size: int,
                repeats: int = 3):
-    """off / sim / kernel / kernel-sharded wall-clock of one forward."""
+    """off / sim / kernel / kernel-sharded wall-clock of one forward.
+
+    Timing goes through telemetry spans (``span/bench/<row>/ms``); the
+    report is derived from ONE registry snapshot at the end, so the
+    printed JSON and any exported metrics dump can never disagree."""
     from repro.serving.engine import pack_params_mxint
     rng = np.random.default_rng(2)
     imgs = jnp.asarray(rng.normal(size=(batch, image_size, image_size, 3))
                        .astype(np.float32))
 
-    def timeit(fn):
+    def timeit(fn, label):
         fn()                                    # compile
-        t0 = time.perf_counter()
         for _ in range(repeats):
-            jax.block_until_ready(fn())
-        return 1e3 * (time.perf_counter() - t0) / repeats
+            with T.span(f"bench/{label}"):
+                jax.block_until_ready(fn())
 
     cfg = m_sim.cfg
     m_off = build_model(dataclasses.replace(cfg, quant=QuantConfig()))
-    rows = {"off": timeit(lambda: jax.jit(m_off.logits)(params, imgs)),
-            "sim": timeit(lambda: jax.jit(m_sim.logits)(params, imgs))}
+    timeit(lambda: jax.jit(m_off.logits)(params, imgs), "off")
+    timeit(lambda: jax.jit(m_sim.logits)(params, imgs), "sim")
     packed = pack_params_mxint(params, KERNEL.weight_fmt)
     fwd1 = jax.jit(m_ker.logits)
-    rows["kernel"] = timeit(lambda: fwd1(packed, imgs))
+    timeit(lambda: fwd1(packed, imgs), "kernel")
     eng = _engine(m_ker, params, batch, mesh, "column")
-    rows[f"kernel_tp{mesh.shape['model']}"] = timeit(
-        lambda: eng._logits(eng.params, imgs))
-    return {k: round(v, 1) for k, v in rows.items()}
+    tp_label = f"kernel_tp{mesh.shape['model']}"
+    timeit(lambda: eng._logits(eng.params, imgs), tp_label)
+    hists = T.snapshot()["histograms"]
+    return {k: round(hists[f"span/bench/{k}/ms"]["mean"], 1)
+            for k in ("off", "sim", "kernel", tp_label)}
 
 
 def main(argv=None):

@@ -1,0 +1,126 @@
+"""Wall-clock spans over the metrics registry (DESIGN.md §15).
+
+``span(name, **attrs)`` is a nestable context manager:
+
+* on exit it records the elapsed wall-clock into the histogram
+  ``span/<name>/ms`` (and each numeric ``attr`` into
+  ``span/<name>/<attr>`` with size buckets) in the target registry;
+* while open it forwards to ``jax.profiler.TraceAnnotation`` when jax
+  is importable, so host spans line up with device traces in a profiler
+  UI — telemetry itself stays dependency-free;
+* nesting is tracked per thread (``current_span()``), and the elapsed
+  time is exposed as ``.elapsed_s``/``.elapsed_ms`` after exit, so
+  callers that used to keep their own ``t0 = time.perf_counter()``
+  bookkeeping read the span instead.
+
+This module is the ONLY place in ``src/`` allowed to call
+``time.time()``/``time.perf_counter()`` — the ``no-adhoc-timing``
+lint rule (DESIGN.md §13) fails anything else.  For plain wall-clock
+*timestamps* (heartbeats, checkpoint metadata) use :func:`walltime`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.telemetry import metrics
+from repro.telemetry.metrics import (DEFAULT_MS_BUCKETS,
+                                     DEFAULT_SIZE_BUCKETS, Registry)
+
+_local = threading.local()
+
+_TRACE_ANNOTATION = None
+_TRACE_TRIED = False
+
+
+def _trace_annotation_cls():
+    """jax.profiler.TraceAnnotation, resolved once, None without jax."""
+    global _TRACE_ANNOTATION, _TRACE_TRIED
+    if not _TRACE_TRIED:
+        _TRACE_TRIED = True
+        try:
+            from jax.profiler import TraceAnnotation
+            _TRACE_ANNOTATION = TraceAnnotation
+        except Exception:          # pragma: no cover - no-jax environments
+            _TRACE_ANNOTATION = None
+    return _TRACE_ANNOTATION
+
+
+def walltime() -> float:
+    """Epoch-seconds timestamp (the sanctioned ``time.time()``).
+
+    For *metadata* — heartbeat files, checkpoint manifests, request
+    submit stamps.  Durations go through :class:`span`, never through
+    subtracting two ``walltime()`` calls."""
+    return time.time()
+
+
+class span:
+    """``with span("serving/classify", images=n): ...``
+
+    Records ``span/serving/classify/ms`` (latency histogram) and
+    ``span/serving/classify/images`` (size histogram) on exit.  Attrs
+    must be host scalars — jax tracers raise (the registry's jit-safety
+    contract, DESIGN.md §15).
+    """
+
+    __slots__ = ("name", "attrs", "registry", "elapsed_s", "_t0", "_ta")
+
+    def __init__(self, name: str, registry: Optional[Registry] = None,
+                 **attrs):
+        self.name = name
+        self.attrs = attrs
+        self.registry = registry or metrics.default_registry()
+        self.elapsed_s: Optional[float] = None
+        self._t0 = None
+        self._ta = None
+
+    @property
+    def elapsed_ms(self) -> Optional[float]:
+        return None if self.elapsed_s is None else self.elapsed_s * 1e3
+
+    def __enter__(self) -> "span":
+        stack = getattr(_local, "stack", None)
+        if stack is None:
+            stack = _local.stack = []
+        stack.append(self)
+        cls = _trace_annotation_cls()
+        if cls is not None:
+            try:
+                self._ta = cls(self.name)
+                self._ta.__enter__()
+            except Exception:      # profiler unavailable mid-run: fine
+                self._ta = None
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.elapsed_s = time.perf_counter() - self._t0
+        if self._ta is not None:
+            try:
+                self._ta.__exit__(exc_type, exc, tb)
+            except Exception:
+                pass
+        _local.stack.pop()
+        reg = self.registry
+        reg.histogram(f"span/{self.name}/ms",
+                      DEFAULT_MS_BUCKETS).record(self.elapsed_ms)
+        for key, val in self.attrs.items():
+            reg.histogram(f"span/{self.name}/{key}",
+                          DEFAULT_SIZE_BUCKETS).record(val)
+        return False
+
+
+def current_span() -> Optional[span]:
+    """Innermost open span on this thread, or None."""
+    stack = getattr(_local, "stack", None)
+    return stack[-1] if stack else None
+
+
+def span_stats(name: str, registry: Optional[Registry] = None):
+    """(count, mean_ms) of a recorded span — the one-line read most
+    report dicts need after replacing hand-rolled perf_counter math."""
+    reg = registry or metrics.default_registry()
+    h = reg.histogram(f"span/{name}/ms", DEFAULT_MS_BUCKETS)
+    return h.count, h.mean

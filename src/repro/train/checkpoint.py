@@ -31,7 +31,6 @@ import json
 import os
 import re
 import shutil
-import time
 from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
@@ -39,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as T
 from repro.models.model_api import Param, is_param
 from repro.core.quantize import MXTensor
 
@@ -85,7 +85,7 @@ class CheckpointManager:
         np.savez(tmp / "shard_00000.npz", **arrays)
         manifest = {
             "step": step,
-            "time": time.time(),
+            "time": T.walltime(),
             "leaves": manifest_leaves,
             "extra": extra or {},
         }

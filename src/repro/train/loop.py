@@ -12,18 +12,21 @@ The loop is host-side orchestration around the jitted train step:
   * step-time EMA straggler detection — steps slower than
     ``straggler_factor`` x EMA are logged to the metrics stream so a fleet
     scheduler can act (on one host we can only observe, not migrate);
-  * metrics JSONL for offline analysis.
+  * metrics JSONL for offline analysis — each logged record carries the
+    live ``repro.telemetry`` snapshot (DESIGN.md §15), so the step-time
+    histogram and any serving/kernel counters ride in the same stream.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
+
+from repro import telemetry as T
 
 
 @dataclasses.dataclass
@@ -69,7 +72,7 @@ class TrainLoop:
     def _heartbeat(self, step: int):
         if self.cfg.heartbeat_path:
             Path(self.cfg.heartbeat_path).write_text(
-                json.dumps({"step": step, "time": time.time()}))
+                json.dumps({"step": step, "time": T.walltime()}))
 
     def _checkpoint(self, step: int):
         extra = {}
@@ -82,11 +85,14 @@ class TrainLoop:
         step = self.try_resume() if start_step is None else start_step
         cfg = self.cfg
         while step < cfg.total_steps:
-            t0 = time.time()
-            batch = self.data.next_batch()
-            self.state, metrics = self.step_fn(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+            # the span IS the step timer: its histogram feeds the JSONL
+            # snapshot and its .elapsed_s feeds the EMA — one clock read,
+            # no parallel t0/dt bookkeeping
+            with T.span("train/step") as sp:
+                batch = self.data.next_batch()
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            dt = sp.elapsed_s
             step += 1
 
             ema = self._ema_step_time
@@ -102,7 +108,8 @@ class TrainLoop:
                        "grad_norm": float(np.asarray(metrics["grad_norm"])),
                        "lr": float(np.asarray(metrics["lr"])),
                        "step_time_s": round(dt, 4),
-                       "straggler": bool(straggler)}
+                       "straggler": bool(straggler),
+                       "telemetry": T.snapshot()}
                 self.metrics.append(rec)
                 if cfg.metrics_path:
                     with open(cfg.metrics_path, "a") as f:

@@ -1,0 +1,18 @@
+"""Shared test hooks.
+
+When ``REPRO_METRICS_JSON`` is set (the CI lanes set it), the telemetry
+snapshot accumulated across the whole test session — serving spans,
+scheduler counters, kernel fallback counts — is dumped there at exit
+and archived next to the repro_lint report (DESIGN.md §15)."""
+import os
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("REPRO_METRICS_JSON")
+    if not path:
+        return
+    try:
+        from repro.telemetry.export import json_snapshot
+        json_snapshot(path=path, extra={"pytest_exit_status": int(exitstatus)})
+    except Exception as exc:       # never fail the run over the dump
+        print(f"[conftest] metrics dump skipped: {exc}")

@@ -9,12 +9,17 @@ masks pad keys to NEG_INF, whose exp underflows to exactly 0, and
 per-row decode validity hides the other rows' ring slots, so batching
 is numerically invisible.
 
-Three properties per stream:
+Four properties per stream:
   * token identity: each uid's ``generated`` equals the oracle's;
   * conservation: no request lost, duplicated, or left unfinished;
   * zero recompiles: ``engine.jit_cache_size()`` flat after warmup
     (one decode spec per batch shape, one slot-prefill spec per
-    prompt-length bucket).
+    prompt-length bucket);
+  * telemetry conservation (DESIGN.md §15): the scheduler's counters
+    tell the same story — ``scheduler/submitted == scheduler/completed
+    + scheduler/in_flight`` at every step boundary, everything
+    completed after the drain, and the ``serving/recompiles`` counter
+    still 0 after warmup.
 
 The stream checker is plain code; a seeded test drives it always, and
 the hypothesis suite (optional dep, ``slow`` marker — the full CI lane
@@ -27,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import telemetry as T
 from repro.core.mx_types import QuantConfig
 from repro.models.model_api import ModelConfig
 from repro.serving.engine import ServeConfig, ServingEngine
@@ -76,9 +82,18 @@ def make_stream(spec, seed):
     return reqs
 
 
+def _assert_telemetry_conserved():
+    """submitted == completed + in_flight, from one coherent snapshot."""
+    snap = T.snapshot()
+    submitted = snap["counters"].get("scheduler/submitted", 0)
+    completed = snap["counters"].get("scheduler/completed", 0)
+    in_flight = snap["gauges"].get("scheduler/in_flight", 0)
+    assert submitted == completed + in_flight, snap["counters"]
+
+
 def check_stream(eng, spec, seed, batch_size, check_jit=False):
     """Run one request stream through the slot scheduler and the oracle;
-    assert the three properties."""
+    assert the four properties."""
     want = {r.uid: oracle_generate(eng, r.prompt, r.max_new_tokens, EOS)
             for r in make_stream(spec, seed)}
 
@@ -95,6 +110,11 @@ def check_stream(eng, spec, seed, batch_size, check_jit=False):
             wsched.submit(dataclasses.replace(r, uid=-1))
         wsched.run()
         base = eng.jit_cache_size()
+    # fresh counters for this stream (warmup/oracle traffic excluded);
+    # the engine keeps its jit-cache baseline, so any recompile in the
+    # main stream would still land in the re-created counter
+    T.reset("scheduler/")
+    T.reset("serving/")
     for r in reqs:
         sched.submit(r)
     done = sched.run(max_steps=4096)
@@ -107,8 +127,17 @@ def check_stream(eng, spec, seed, batch_size, check_jit=False):
     for r in done:
         assert r.generated == want[r.uid], (
             r.uid, r.generated, want[r.uid])
+    # telemetry tells the same conservation story after the drain
+    snap = T.snapshot()
+    assert snap["counters"].get("scheduler/submitted", 0) == len(spec)
+    assert snap["counters"].get("scheduler/completed", 0) == len(spec)
+    assert snap["gauges"].get("scheduler/in_flight", 1) == 0
+    assert snap["gauges"].get("scheduler/queue_depth", 1) == 0
+    assert snap["histograms"][
+        "scheduler/request_latency_ms"]["count"] == len(spec)
     if check_jit and base >= 0:
         assert eng.jit_cache_size() == base   # zero recompiles
+        assert snap["counters"].get("serving/recompiles", 0) == 0
     return done
 
 
@@ -130,6 +159,46 @@ class TestSlotSchedulerSeeded:
     def test_batch_one_degenerates_to_sequential(self, engine):
         spec = [(5, 4), (3, 6), (11, 2)]
         check_stream(engine, spec, seed=3, batch_size=1)
+
+    def test_telemetry_conserved_at_every_step(self, engine):
+        """submitted == completed + in_flight holds at EVERY step
+        boundary (not just after the drain), through a mid-stream
+        late submit, and the recompile counter stays 0 after warmup."""
+        # warmup: compile decode (batch 3) + slot prefill, set baseline
+        wsched = BatchScheduler(engine, batch_size=3, eos_id=EOS,
+                                prefill_len=PREFILL_LEN)
+        for r in make_stream([(1, 2)], seed=99):
+            wsched.submit(dataclasses.replace(r, uid=-1))
+        wsched.run()
+
+        T.reset("scheduler/")
+        T.reset("serving/")
+        sched = BatchScheduler(engine, batch_size=3, eos_id=EOS,
+                               prefill_len=PREFILL_LEN)
+        reqs = make_stream([(3, 5), (12, 2), (1, 6), (7, 4), (5, 3)],
+                           seed=4)
+        late = reqs.pop()
+        for r in reqs:
+            sched.submit(r)
+            _assert_telemetry_conserved()
+        for i in range(4096):
+            alive = sched.step()
+            _assert_telemetry_conserved()
+            if i == 2:
+                sched.submit(late)      # churn mid-stream
+                _assert_telemetry_conserved()
+            if alive == 0 and not sched.queue:
+                break
+        done = sched.run(max_steps=4096)   # final evict bookkeeping
+        assert sorted(r.uid for r in done) == [0, 1, 2, 3, 4]
+        snap = T.snapshot()
+        assert snap["counters"]["scheduler/submitted"] == 5
+        assert snap["counters"]["scheduler/completed"] == 5
+        assert snap["counters"]["scheduler/admissions"] == 5
+        assert snap["gauges"]["scheduler/in_flight"] == 0
+        assert snap["gauges"]["scheduler/slots_active"] == 0
+        assert snap["counters"].get("serving/recompiles", 0) == 0
+        assert snap["counters"]["scheduler/tokens_generated"] >= 5
 
 
 try:                                     # optional dep: only the search

@@ -218,6 +218,36 @@ def build_table(caps: Optional[Sequence[PallasCapture]] = None
 
 
 # ---------------------------------------------------------------------------
+# query API (the repro.dse evaluator's entry point, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+_TABLE_MEMO: List[Dict[str, object]] = []
+
+
+def table(refresh: bool = False) -> List[Dict[str, object]]:
+    """The standard-sweep cost table, memoized (the sweep itself is
+    already memoized in kernel_contracts; this skips re-deriving rows).
+    Rows are shallow copies — treat operand entries as read-only."""
+    if refresh or not _TABLE_MEMO:
+        _TABLE_MEMO[:] = build_table()
+    return [dict(r) for r in _TABLE_MEMO]
+
+
+def query(labels: Optional[Sequence[str]] = None
+          ) -> Dict[str, Dict[str, object]]:
+    """Label-keyed cost rows; with ``labels`` given, KeyError on any
+    unknown label naming the known ones (typo-proof for callers keying
+    off telemetry probe labels)."""
+    rows = {r["label"]: r for r in table()}
+    if labels is None:
+        return rows
+    missing = sorted(set(labels) - set(rows))
+    if missing:
+        raise KeyError(f"unknown cost-model labels {missing}; known: "
+                       f"{sorted(rows)}")
+    return {label: rows[label] for label in labels}
+
+
+# ---------------------------------------------------------------------------
 # DeiT LN->qkv fusion study (logical, unpadded shapes — what the bench's
 # analytic counter accounts; the interpret wrapper's padding is a CPU
 # artefact, not datapath traffic)

@@ -234,6 +234,31 @@ def interpret_literal_in_src() -> List[Violation]:
         "src/repro/serving/bad_interpret.py")
 
 
+def override_branch_outside_seam() -> List[Violation]:
+    """Per-layer override plumbing consulted outside the seam: a models/
+    helper iterating the override pairs and branching on the mode string
+    by hand — both of which must go through ``q.scoped`` /
+    ``datapath.resolve`` (DESIGN.md §16).  Goes through the REAL
+    ``tools/check_dispatch.check_text`` scanner so the fixture also pins
+    the extended rule itself."""
+    import importlib.util
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[3]
+    spec = importlib.util.spec_from_file_location(
+        "_check_dispatch_for_fixture", root / "tools" / "check_dispatch.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    # the seam tokens are split so THIS file's source does not trip the
+    # tree-wide scan the fixture exercises
+    bad = ("def pick_backend(q, scope):\n"
+           "    for pattern, ov in q.over" "rides:\n"
+           "        if q.mo" "de == 'kernel':\n"
+           "            return ov\n")
+    return [Violation("dispatch-seam", "fixture", p)
+            for p in mod.check_text(bad, "src/repro/models/bad_scoping.py")]
+
+
 def adhoc_timing_in_src() -> List[Violation]:
     """Hand-rolled perf_counter deltas in library code — the timing that
     belongs in a ``telemetry.span`` (DESIGN.md §15)."""
@@ -257,6 +282,7 @@ FIXTURES: Dict[str, Callable[[], List[Violation]]] = {
     "exp-in-models": exp_in_models,
     "interpret-literal-in-src": interpret_literal_in_src,
     "adhoc-timing-in-src": adhoc_timing_in_src,
+    "override-branch-outside-seam": override_branch_outside_seam,
     "missing-dim-semantics": missing_dim_semantics,
     "race-parallel-accumulator": race_parallel_accumulator,
     "reversed-init-flush": reversed_init_flush,
@@ -276,6 +302,7 @@ FIXTURE_RULES: Dict[str, str] = {
     "exp-in-models": "models-float-nonlinear",
     "interpret-literal-in-src": "interpret-literal",
     "adhoc-timing-in-src": "no-adhoc-timing",
+    "override-branch-outside-seam": "dispatch-seam",
     "missing-dim-semantics": "grid-semantics",
     "race-parallel-accumulator": "grid-semantics",
     "reversed-init-flush": "grid-semantics",

@@ -60,8 +60,21 @@ class MXFormat:
     exp_bits: int = 8
 
     def __post_init__(self):
+        # bool is an int subclass; reject it explicitly so MXFormat(True)
+        # cannot masquerade as a 1-bit width
+        if isinstance(self.mant_bits, bool) or \
+                not isinstance(self.mant_bits, int):
+            raise TypeError(f"mant_bits must be an int, "
+                            f"got {type(self.mant_bits).__name__}")
         if not (2 <= self.mant_bits <= 24):
+            # < 2 leaves no magnitude bit beside the sign; > 24 exceeds the
+            # f32 significand the quantizer round-trips through, so the
+            # extra codes could not be represented exactly
             raise ValueError(f"mant_bits must be in [2, 24], got {self.mant_bits}")
+        if isinstance(self.block_size, bool) or \
+                not isinstance(self.block_size, int):
+            raise TypeError(f"block_size must be an int, "
+                            f"got {type(self.block_size).__name__}")
         if self.block_size < 1:
             raise ValueError("block_size must be >= 1")
         if self.exp_bits != 8:
@@ -147,6 +160,35 @@ class NonlinearConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class QuantOverride:
+    """A per-layer-group patch on a :class:`QuantConfig` (DESIGN.md §16).
+
+    Every field is optional; ``None`` means "inherit from the base
+    config".  Overrides attach to a config as ``(pattern, override)``
+    pairs, where ``pattern`` is an ``fnmatch`` glob matched against the
+    scope tag a model passes at its call sites (``"block/3/ffn"``,
+    ``"head"``, ...).  This is the search-space lever of the paper's
+    design-space exploration: per-layer-group mantissa widths, block
+    sizes, backend (mode) choice and LUT widths, without forking the
+    model code.
+    """
+
+    mode: Optional[str] = None
+    weight_fmt: Optional[MXFormat] = None
+    act_fmt: Optional[MXFormat] = None
+    nonlinear: Optional["NonlinearConfig"] = None
+    quantize_nonlinear: Optional[bool] = None
+
+    _FIELDS = ("mode", "weight_fmt", "act_fmt", "nonlinear",
+               "quantize_nonlinear")
+
+    def patch(self) -> dict:
+        """The non-None fields, as dataclasses.replace kwargs."""
+        return {f: getattr(self, f) for f in self._FIELDS
+                if getattr(self, f) is not None}
+
+
+@dataclasses.dataclass(frozen=True)
 class QuantConfig:
     """Framework-level quantization policy for a model.
 
@@ -184,6 +226,9 @@ class QuantConfig:
     nl_emulate: Optional[str] = None   # None=MXInt datapath | 'fixedpoint'
                                        # ([9]/HeatViT/I-ViT) | 'relu6' (SDA)
                                        # — Tables II-IV baselines
+    overrides: tuple = ()              # ((glob_pattern, QuantOverride), ...)
+                                       # per-layer-group patches, resolved
+                                       # by scoped() (DESIGN.md §16)
 
     def __post_init__(self):
         if self.mode not in ("off", "fake", "sim", "packed", "kernel"):
@@ -196,10 +241,79 @@ class QuantConfig:
                              "emulate/nl_emulate baselines are XLA-only")
         if self.quantize_nonlinear and self.nonlinear is None:
             object.__setattr__(self, "nonlinear", NonlinearConfig())
+        if self.overrides:
+            norm = []
+            for entry in self.overrides:
+                try:
+                    pattern, ov = entry
+                except (TypeError, ValueError):
+                    raise ValueError(
+                        f"overrides entries must be (pattern, QuantOverride) "
+                        f"pairs, got {entry!r}") from None
+                if not isinstance(pattern, str) or not pattern:
+                    raise ValueError(f"override pattern must be a non-empty "
+                                     f"glob string, got {pattern!r}")
+                if not isinstance(ov, QuantOverride):
+                    raise TypeError(f"override for {pattern!r} must be a "
+                                    f"QuantOverride, got "
+                                    f"{type(ov).__name__}")
+                norm.append((pattern, ov))
+            object.__setattr__(self, "overrides", tuple(norm))
 
     @property
     def enabled(self) -> bool:
         return self.mode != "off"
+
+    @property
+    def has_overrides(self) -> bool:
+        """True when per-layer-group patches are attached — models use
+        this to switch from the stacked lax.scan over blocks (one traced
+        body) to an unrolled per-layer loop that can carry different
+        static configs (DESIGN.md §16)."""
+        return bool(self.overrides)
+
+    def scoped(self, scope: Optional[str]) -> "QuantConfig":
+        """The effective config for layer-group ``scope`` (DESIGN.md §16).
+
+        Matching ``overrides`` patterns apply in declaration order, later
+        entries winning field-by-field; the merged patch is applied to
+        the base fields and the result (with ``overrides`` stripped, so
+        scoping is idempotent) is cached per scope on this instance.
+        With no overrides — or ``scope=None``, the untagged call sites —
+        this returns ``self``, keeping the global-config path literally
+        identical.
+        """
+        if scope is None or not self.overrides:
+            return self
+        cache = self.__dict__.setdefault("_scoped_cache", {})
+        got = cache.get(scope)
+        if got is None:
+            got = cache[scope] = self._resolve_scope(scope)
+        return got
+
+    def _resolve_scope(self, scope: str) -> "QuantConfig":
+        import fnmatch
+        patch: dict = {}
+        for pattern, ov in self.overrides:
+            if fnmatch.fnmatchcase(scope, pattern):
+                patch.update(ov.patch())
+        return dataclasses.replace(self, overrides=(), **patch)
+
+    def describe(self) -> dict:
+        """JSON-serializable summary (the dse report's config block)."""
+        nl = self.nonlinear
+        return {
+            "mode": self.mode,
+            "weight_fmt": {"mant_bits": self.weight_fmt.mant_bits,
+                           "block_size": self.weight_fmt.block_size},
+            "act_fmt": {"mant_bits": self.act_fmt.mant_bits,
+                        "block_size": self.act_fmt.block_size},
+            "quantize_nonlinear": self.quantize_nonlinear,
+            "nonlinear": None if nl is None else {
+                "ln_lut_bits": nl.ln_lut_bits,
+                "gelu_lut_bits": nl.gelu_lut_bits,
+                "softmax_r_bits": nl.softmax_r_bits},
+        }
 
     @functools.cached_property
     def datapath(self):

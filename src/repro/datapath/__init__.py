@@ -52,9 +52,17 @@ def backends() -> Dict[str, Datapath]:
     return dict(_BACKENDS)
 
 
-def resolve(q) -> Datapath:
+def resolve(q, scope=None) -> Datapath:
     """Backend for ``q.mode``.  Called once per config by the
-    ``QuantConfig.datapath`` cached property."""
+    ``QuantConfig.datapath`` cached property.
+
+    ``scope`` is the optional per-layer-group tag (DESIGN.md §16): the
+    config's ``overrides`` are applied first (``q.scoped(scope)``), so a
+    scope whose override swaps the mode resolves to a DIFFERENT backend
+    than the base config — kernel attention + sim FFN in one model.
+    """
+    if scope is not None:
+        q = q.scoped(scope)
     try:
         return _BACKENDS[q.mode]
     except KeyError:

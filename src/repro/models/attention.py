@@ -269,7 +269,8 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
               kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
               use_rope: bool = True,
               chunk: int = 1024,
-              prenorm: Optional[Tuple] = None):
+              prenorm: Optional[Tuple] = None,
+              scope: Optional[str] = None):
     """Returns (output (b, s, d), updated cache or None).
 
     Modes:
@@ -283,7 +284,13 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
     q/k/v projections run through the ``layernorm_linear`` composite
     (fused on backends that provide it; norm-then-linear otherwise —
     bit-identical, DESIGN.md §12).  beta is None for 'rms'.
+
+    scope: optional layer-group tag ("block/3/attn"); per-layer
+    overrides on the config resolve ONCE here (``quant.scoped``), and
+    the whole attention op — projections, scores, softmax — runs the
+    scoped config (DESIGN.md §16).
     """
+    quant = quant.scoped(scope)
     b, s, _ = x.shape
     hd = cfg.hd
     kvh = cfg.n_kv_heads

@@ -49,8 +49,14 @@ def shard_hint(x: jnp.ndarray, spec) -> jnp.ndarray:
 # linears
 # ---------------------------------------------------------------------------
 def linear(x: jnp.ndarray, w: Param, b: Optional[Param] = None, *,
-           q: QuantConfig) -> jnp.ndarray:
-    """y = x @ w (+ b); w may be a packed MXTensor in serving mode."""
+           q: QuantConfig, scope: Optional[str] = None) -> jnp.ndarray:
+    """y = x @ w (+ b); w may be a packed MXTensor in serving mode.
+
+    ``scope``: optional per-layer-group tag — the config's overrides are
+    resolved here (``q.scoped``), so a scoped call site may run a
+    different format or backend than the global config (DESIGN.md §16).
+    """
+    q = q.scoped(scope)
     return q.datapath.linear(x, w, b, q=q)
 
 
@@ -80,7 +86,9 @@ def rmsnorm(x: jnp.ndarray, gamma: Param, *, q: QuantConfig,
 
 
 def layernorm(x: jnp.ndarray, gamma: Param, beta: Param, *, q: QuantConfig,
-              eps: float = 1e-6) -> jnp.ndarray:
+              eps: float = 1e-6,
+              scope: Optional[str] = None) -> jnp.ndarray:
+    q = q.scoped(scope)
     return q.datapath.layernorm(x, gamma, beta, q=q, eps=eps)
 
 
@@ -151,7 +159,7 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
 # FFN
 # ---------------------------------------------------------------------------
 def ffn(x: jnp.ndarray, p, kind: str, q: QuantConfig, prenorm=None,
-        eps: float = 1e-6) -> jnp.ndarray:
+        eps: float = 1e-6, scope: Optional[str] = None) -> jnp.ndarray:
     """p: dict with wi/wg/wo (gated) or wi/wo (plain).
 
     ``prenorm``: optional ('ln'|'rms', gamma, beta) — the block's pre-FFN
@@ -159,7 +167,11 @@ def ffn(x: jnp.ndarray, p, kind: str, q: QuantConfig, prenorm=None,
     composite when the backend provides it (beta is None for 'rms').
     Without a composite the norm runs once up front — the classic two-op
     block, bit-identical by the composite contract.
+
+    ``scope``: optional layer-group tag; the whole FFN resolves one
+    scoped config up front (DESIGN.md §16).
     """
+    q = q.scoped(scope)
     _in_ws = [p["wi"], p["wg"]] if kind in ("swiglu", "geglu") else \
         ([p["wi"]] if kind == "gelu" else [])
     if prenorm is not None and not all(

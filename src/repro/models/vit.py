@@ -100,36 +100,53 @@ class ViT:
         cfg = self.cfg
         quant = cfg.quant
         x = self.patchify(images.astype(cfg.dtype))
-        x = L.linear(x, params["patch_proj"], params["patch_bias"], q=quant)
+        x = L.linear(x, params["patch_proj"], params["patch_bias"], q=quant,
+                     scope="patch")
         cls = jnp.broadcast_to(params["cls_token"].value.astype(x.dtype),
                                (x.shape[0], 1, x.shape[-1]))
         x = jnp.concatenate([cls, x], axis=1)
         x = x + params["pos_embed"].value.astype(x.dtype)[None]
 
-        def block(x, bp):
+        def block(x, bp, attn_scope=None, ffn_scope=None):
             # pre-norms ride into the consuming linears through the
             # layernorm_linear composite seam: fused LN->qkv / LN->wi in
             # kernel mode, norm-then-linear otherwise (DESIGN.md §12)
             o, _ = A.attention(bp["attn"], x, cfg, quant=quant,
                                positions=jnp.arange(x.shape[1])[None, :],
                                causal=False, use_rope=False,
-                               prenorm=("ln", bp["ln1_g"], bp["ln1_b"]))
+                               prenorm=("ln", bp["ln1_g"], bp["ln1_b"]),
+                               scope=attn_scope)
             x = x + o
             return x + L.ffn(x, bp["ffn"], "gelu", quant,
                              prenorm=("ln", bp["ln2_g"], bp["ln2_b"]),
-                             eps=cfg.norm_eps), None
+                             eps=cfg.norm_eps, scope=ffn_scope)
 
-        if cfg.remat in ("block", "full"):
-            block = jax.checkpoint(block)
-        x, _ = jax.lax.scan(block, x, params["blocks"])
+        remat = cfg.remat in ("block", "full")
+        if quant.has_overrides:
+            # per-layer-group overrides are STATIC per block (different
+            # formats/backends per layer), which one scanned trace cannot
+            # carry — unroll over blocks, slicing each layer's params out
+            # of the stacked tree (DESIGN.md §16)
+            for i in range(cfg.n_layers):
+                bp = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                            params["blocks"])
+                step = (lambda x, bp=bp, i=i:
+                        block(x, bp, f"block/{i}/attn", f"block/{i}/ffn"))
+                x = jax.checkpoint(step)(x) if remat else step(x)
+        else:
+            def scan_block(x, bp):
+                return block(x, bp), None
+            if remat:
+                scan_block = jax.checkpoint(scan_block)
+            x, _ = jax.lax.scan(scan_block, x, params["blocks"])
         return L.layernorm(x, params["final_ln_g"], params["final_ln_b"],
-                           q=quant, eps=cfg.norm_eps)
+                           q=quant, eps=cfg.norm_eps, scope="final_ln")
 
     def logits(self, params, images):
         x = self.features(params, images)
         pooled = x[:, 0] if self.cfg.pool == "cls" else x.mean(1)
         return L.linear(pooled, params["head"], params["head_b"],
-                        q=self.cfg.quant)
+                        q=self.cfg.quant, scope="head")
 
     def loss(self, params, batch):
         """batch: {'images': (b,H,W,3), 'labels': (b,) int32}."""

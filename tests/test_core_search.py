@@ -1,0 +1,111 @@
+"""Direct unit tests for core/search.py (the paper's §III-A greedy
+loop and its metrics) and the strengthened MXFormat validation —
+previously exercised only through benchmarks/greedy_search_bench.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mx_types import MXFormat
+from repro.core.search import (argmax_agreement, cosine_fidelity,
+                               greedy_bitwidth_search)
+
+
+class TestMetrics:
+    def test_argmax_agreement_exact(self):
+        a = jnp.asarray([[0.1, 0.9], [0.8, 0.2], [0.3, 0.7], [0.6, 0.4]])
+        b = jnp.asarray([[0.2, 0.8], [0.1, 0.9], [0.4, 0.6], [0.9, 0.1]])
+        # rows 0, 2, 3 agree on argmax; row 1 flips
+        assert argmax_agreement(a, b) == pytest.approx(0.75)
+        assert argmax_agreement(a, a) == 1.0
+
+    def test_cosine_fidelity(self):
+        a = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+        assert cosine_fidelity(a, a) == pytest.approx(1.0, abs=1e-6)
+        assert cosine_fidelity(a, -a) == pytest.approx(-1.0, abs=1e-6)
+        assert cosine_fidelity(a, 10.0 * a) == pytest.approx(1.0, abs=1e-6)
+        b = jnp.asarray([[2.0, -1.0], [4.0, -3.0]])   # orthogonal to a
+        assert cosine_fidelity(a, b) == pytest.approx(0.0, abs=1e-6)
+
+
+def _threshold_apply_fn(thresholds, n_rows=8):
+    """apply_fn whose output argmax degrades per group below a
+    threshold width: each group below threshold flips a distinct 25% of
+    the rows, so the agreement drop is additive and deterministic."""
+    base = np.zeros((n_rows, 4), np.float32)
+    base[:, 0] = 1.0
+
+    def apply_fn(bits):
+        out = base.copy()
+        for gi, (g, t) in enumerate(sorted(thresholds.items())):
+            if bits[g] < t:
+                rows = slice(2 * gi, 2 * gi + 2)      # 2/8 rows = 25%
+                out[rows] = 0.0
+                out[rows, 1 + gi % 3] = 1.0
+        return jnp.asarray(out)
+
+    return apply_fn
+
+
+class TestGreedyBitwidthSearch:
+    def test_stops_at_per_group_thresholds(self):
+        apply_fn = _threshold_apply_fn({"a": 6, "b": 4})
+        res = greedy_bitwidth_search(apply_fn, ["a", "b"], max_bits=10,
+                                     min_bits=3, budget=0.01)
+        # each group lowers until one step below threshold is rejected
+        assert res.bits == {"a": 6, "b": 4}
+        assert res.mean_bits == pytest.approx(5.0)
+        # trace records the rejected probe one step below each threshold
+        rejected = [(g, b) for g, b, _, ok in res.trace if not ok]
+        assert rejected == [("a", 5), ("b", 3)]
+        accepted = [(g, b) for g, b, _, ok in res.trace if ok]
+        assert ("a", 6) in accepted and ("b", 4) in accepted
+
+    def test_loose_budget_reaches_min_bits(self):
+        apply_fn = _threshold_apply_fn({"a": 6, "b": 4})
+        res = greedy_bitwidth_search(apply_fn, ["a", "b"], max_bits=8,
+                                     min_bits=3, budget=1.0)
+        assert res.bits == {"a": 3, "b": 3}
+
+    def test_explicit_reference_and_cosine_metric(self):
+        apply_fn = _threshold_apply_fn({"a": 5})
+        ref = apply_fn({"a": 10})
+        res = greedy_bitwidth_search(apply_fn, ["a"], max_bits=7,
+                                     min_bits=3, budget=0.01,
+                                     metric="cosine", reference=ref)
+        assert res.bits == {"a": 5}
+
+    def test_unknown_metric_raises(self):
+        with pytest.raises(ValueError, match="unknown metric"):
+            greedy_bitwidth_search(lambda b: jnp.zeros((2, 2)), ["a"],
+                                   metric="nope")
+
+
+class TestMXFormatValidation:
+    """The quantizer round-trips through f32 and int mantissa planes:
+    widths it cannot represent must be rejected at construction."""
+
+    @pytest.mark.parametrize("bad", [True, False, 6.0, "8", None, 6.5])
+    def test_non_int_mant_bits_rejected(self, bad):
+        with pytest.raises(TypeError, match="mant_bits"):
+            MXFormat(mant_bits=bad)
+
+    @pytest.mark.parametrize("bad", [-3, 0, 1, 25, 64])
+    def test_out_of_range_mant_bits_rejected(self, bad):
+        with pytest.raises(ValueError, match="mant_bits"):
+            MXFormat(mant_bits=bad)
+
+    @pytest.mark.parametrize("bad", [True, 16.0, "32"])
+    def test_non_int_block_size_rejected(self, bad):
+        with pytest.raises(TypeError, match="block_size"):
+            MXFormat(block_size=bad)
+
+    def test_nonpositive_block_size_rejected(self):
+        with pytest.raises(ValueError, match="block_size"):
+            MXFormat(block_size=0)
+
+    def test_valid_bounds_accepted(self):
+        assert MXFormat(mant_bits=2).mant_max == 1
+        f = MXFormat(mant_bits=24, block_size=1)
+        assert f.bits_per_element == pytest.approx(32.0)
+        assert MXFormat(mant_bits=6, block_size=256).bits_per_element == \
+            pytest.approx(6.03125)

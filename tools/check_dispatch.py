@@ -20,6 +20,14 @@ none can evade the guard (nothing outside the seam has a legitimate
 read of the mode string; identifiers merely ENDING in "mode" —
 ``tp_mode``, ``exp_mode`` — are untouched).
 
+The per-layer override plumbing (DESIGN.md §16) gets the same
+treatment: reading ``.overrides`` outside the seam re-implements scope
+resolution ad hoc — scoping decisions go through ``QuantConfig.scoped``
+/ ``datapath.resolve(q, scope)`` only, so any ``.overrides`` attribute
+read in ``src/`` outside the allowed files is flagged.  (The boolean
+``.has_overrides`` gate models use to pick scan vs unroll is a distinct
+token and stays free.)
+
 This check is folded into the unified static-analysis runner as the
 ``dispatch-seam`` rule — CI and local runs go through that
 (DESIGN.md §13)::
@@ -27,8 +35,10 @@ This check is folded into the unified static-analysis runner as the
     PYTHONPATH=src python tools/repro_lint.py
 
 Standalone invocation (``python tools/check_dispatch.py``) and the
-importable ``check(root) -> list[str]`` remain for scripting;
-tests/test_datapath.py runs ``check`` in tier-1.
+importable ``check(root) -> list[str]`` / ``check_text(text, relpath)``
+remain for scripting; tests/test_datapath.py runs ``check`` in tier-1
+and the ``override-branch-outside-seam`` lint fixture goes through
+``check_text``.
 """
 from __future__ import annotations
 
@@ -41,8 +51,31 @@ from pathlib import Path
 ATTR_BRANCH = re.compile(r"\.mode\b")
 # bare membership: `mode in (`, not `tp_mode in (` / `exp_mode in (`
 BARE_BRANCH = re.compile(r"(?<![\w.])mode\s+(?:not\s+)?in\s*\(")
+# per-layer override reads outside the seam (`.has_overrides` is a
+# different attribute token and does not match)
+OVERRIDE_READ = re.compile(r"\.overrides\b")
 
 ALLOWED = ("src/repro/datapath/", "src/repro/core/mx_types.py")
+
+
+def check_text(text: str, relpath: str) -> list:
+    """Seam problems in one file's source (``relpath`` repo-relative)."""
+    if any(relpath.startswith(a) for a in ALLOWED):
+        return []
+    problems = []
+    for i, line in enumerate(text.splitlines(), 1):
+        if ATTR_BRANCH.search(line) or BARE_BRANCH.search(line):
+            problems.append(
+                f"{relpath}:{i} touches a quant mode string outside "
+                f"repro/datapath/: {line.strip()!r} — dispatch through "
+                f"q.datapath instead (DESIGN.md §12)")
+        elif OVERRIDE_READ.search(line):
+            problems.append(
+                f"{relpath}:{i} reads per-layer overrides outside the "
+                f"seam: {line.strip()!r} — resolve through "
+                f"q.scoped(scope) / datapath.resolve(q, scope) "
+                f"(DESIGN.md §16)")
+    return problems
 
 
 def check(root: Path) -> list:
@@ -51,14 +84,7 @@ def check(root: Path) -> list:
         if "__pycache__" in py.parts:
             continue
         rel = py.relative_to(root).as_posix()
-        if any(rel.startswith(a) for a in ALLOWED):
-            continue
-        for i, line in enumerate(py.read_text().splitlines(), 1):
-            if ATTR_BRANCH.search(line) or BARE_BRANCH.search(line):
-                problems.append(
-                    f"{rel}:{i} touches a quant mode string outside "
-                    f"repro/datapath/: {line.strip()!r} — dispatch through "
-                    f"q.datapath instead (DESIGN.md §12)")
+        problems.extend(check_text(py.read_text(), rel))
     return problems
 
 
